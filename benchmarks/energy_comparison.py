@@ -1,0 +1,49 @@
+"""Fig. 6 reproduction: energy vs CPU/GPU/TPU/FPGA/TransPIM/LT/TRON/SCONNA.
+
+Normalized-to-CPU energy per inference for the five paper models.
+Claims under test: ASTRA >=1.3x lower energy than every accelerator and
+>1000x lower than CPU/GPU/TPU.
+"""
+from __future__ import annotations
+
+from repro.configs import PAPER_MODELS, PAPER_SEQ_LEN, get_arch
+from repro.core.baselines import BASELINES, simulate_baseline
+from repro.core.energy import AstraChipConfig
+from repro.core.simulator import simulate
+
+PLATFORMS = ("cpu", "gpu", "tpu")
+
+
+def run(log=print):
+    chip = AstraChipConfig()
+    names = list(BASELINES) + ["astra"]
+    log("# Fig6: energy per inference, normalized to CPU (lower is better)")
+    log("energy_comparison,model," + ",".join(names))
+    out = {}
+    worst_acc, worst_plat = float("inf"), float("inf")
+    for model in PAPER_MODELS:
+        cfg = get_arch(model)
+        seq = PAPER_SEQ_LEN[model]
+        astra = simulate(cfg, chip, seq=seq)
+        e = {"astra": astra.total_energy_j}
+        for b, spec in BASELINES.items():
+            e[b] = simulate_baseline(spec, cfg, seq).total_energy_j
+        cpu = e["cpu"]
+        log(f"energy_comparison,{model}," +
+            ",".join(f"{e[n] / cpu:.3e}" for n in names))
+        for b in BASELINES:
+            ratio = e[b] / e["astra"]
+            if b in PLATFORMS:
+                worst_plat = min(worst_plat, ratio)
+            else:
+                worst_acc = min(worst_acc, ratio)
+        out[model] = {n: e[n] for n in names}
+    ok = worst_acc >= 1.3 and worst_plat > 1000.0
+    log(f"energy_comparison,worst_accel_ratio={worst_acc:.2f}(>=1.3),"
+        f"worst_platform_ratio={worst_plat:.0f}(>1000),{'PASS' if ok else 'FAIL'}")
+    return {"energies_J": out, "worst_accel_ratio": worst_acc,
+            "worst_platform_ratio": worst_plat, "claim_pass": bool(ok)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,176 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run.
+
+Reads artifacts/dryrun*/ JSON records (produced by repro.launch.dryrun) and
+derives, per cell:
+
+  compute_s    = HLO_FLOPs_per_device / 197 TFLOP/s      (bf16 peak, v5e)
+  memory_s     = HLO_bytes_per_device / 819 GB/s          (HBM)
+  collective_s = link_traffic_bytes_per_device / 50 GB/s  (ICI, 1 link)
+
+HLO_FLOPs/bytes are trip-weighted dot counts parsed from the optimized SPMD
+HLO (XLA's cost_analysis does not unroll while loops — see launch/dryrun).
+The HLO is the per-device partitioned module, so terms are per-chip already.
+Also reported: MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N =
+active params and D = tokens, the useful-compute ratio, the dominant term,
+and a one-line "what would move it" hint.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+TPU_PEAK_FLOPS = 197e12
+TPU_HBM_BW = 819e9
+TPU_ICI_BW = 50e9
+
+SHAPE_TOKENS = {  # (seq, batch); decode steps process batch*1 tokens
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+HINTS = {
+    "compute": "raise per-chip utilization: larger per-device tiles (less padding), "
+               "fewer remat recomputations, MXU-aligned (128) GEMM dims",
+    "memory": "cut HBM traffic: fuse dequant/norm chains, int8 weights on the "
+              "serving path, better activation-checkpoint policy",
+    "collective": "re-shard the dominant all-gather/all-reduce: move FSDP gathers "
+                  "off the critical path, overlap with compute, int8-compress "
+                  "cross-pod reductions, flash-decoding style seq-sharded KV",
+}
+
+
+def terms_for(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = {"16x16": 256, "2x16x16": 512}[rec["mesh"]]
+    seq, batch, kind = SHAPE_TOKENS[rec["shape"]]
+    flops_dev = rec.get("hlo_flops", 0.0)
+    bytes_dev = rec.get("hlo_bytes", 0.0) + rec.get("memory", {}).get("argument_size_in_bytes", 0)
+    coll_dev = sum(c.get("traffic_bytes", 0.0) for c in rec.get("collectives", {}).values())
+    compute_s = flops_dev / TPU_PEAK_FLOPS
+    memory_s = bytes_dev / TPU_HBM_BW
+    collective_s = coll_dev / TPU_ICI_BW
+    tokens = batch * seq if kind in ("train", "prefill") else batch
+    n = rec.get("active_params", rec.get("params", 0))
+    model_flops = (6 if kind == "train" else 2) * n * tokens
+    model_flops_dev = model_flops / chips
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(compute_s, memory_s, collective_s)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops_dev / flops_dev if flops_dev else 0.0,
+        # fraction of the bound the *useful* model compute represents: the
+        # roofline score (1.0 = useful work saturates the binding resource)
+        "roofline_frac": (model_flops_dev / TPU_PEAK_FLOPS) / bound if bound else 0.0,
+        "step_time_lb_s": bound,
+        "hint": HINTS[dominant],
+    }
+
+
+# newest-first: dryrun4 = optimized defaults (--strategy auto), dryrun3 =
+# optimized code w/ baseline sharding, dryrun2 = paper-faithful baseline
+DEFAULT_DIRS = ("artifacts/dryrun4", "artifacts/dryrun3", "artifacts/dryrun2", "artifacts/dryrun")
+
+
+def load(out_dirs=DEFAULT_DIRS) -> List[Dict]:
+    recs = {}
+    for d in out_dirs:
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            rec = json.load(open(path))
+            key = (rec["arch"], rec["shape"], rec["mesh"])
+            if key not in recs:  # first dir wins (newest artifacts first)
+                recs[key] = rec
+    return list(recs.values())
+
+
+def markdown_table(out_dirs=DEFAULT_DIRS, mesh="16x16") -> str:
+    """EXPERIMENTS.md-ready roofline table for one mesh."""
+    rows = [t for r in load(out_dirs) if (t := terms_for(r)) and t["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        f"| arch | shape | compute_s | memory_s | collective_s | dominant | useful | frac | what moves it |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"| {r['collective_s']:.3g} | {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_frac']:.3f} | {r['hint'].split(':')[0]} |"
+        )
+    return "\n".join(lines)
+
+
+def compare(log=print, baseline_dirs=("artifacts/dryrun2",), opt_dirs=("artifacts/dryrun4",),
+            mesh="16x16"):
+    """Baseline vs optimized step-time bounds per cell (EXPERIMENTS SPerf)."""
+    import math
+
+    def tab(dirs):
+        return {(t["arch"], t["shape"]): t for r in load(dirs)
+                if (t := terms_for(r)) and t["mesh"] == mesh}
+
+    base, opt = tab(baseline_dirs), tab(opt_dirs)
+    log("roofline_compare,arch,shape,bound_base_s,bound_opt_s,speedup,frac_base,frac_opt")
+    gains = []
+    for k in sorted(base):
+        if k not in opt:
+            continue
+        b, o = base[k], opt[k]
+        sp = b["step_time_lb_s"] / o["step_time_lb_s"] if o["step_time_lb_s"] else 0.0
+        gains.append(sp)
+        log(f"roofline_compare,{k[0]},{k[1]},{b['step_time_lb_s']:.3g},"
+            f"{o['step_time_lb_s']:.3g},{sp:.2f},{b['roofline_frac']:.3f},{o['roofline_frac']:.3f}")
+    if gains:
+        geo = math.exp(sum(math.log(g) for g in gains) / len(gains))
+        log(f"roofline_compare,geomean_speedup,{geo:.2f}")
+        return {"geomean_speedup": geo, "n_cells": len(gains),
+                "claim_pass": bool(min(gains) > 0.95)}
+    return {"geomean_speedup": 0.0, "n_cells": 0, "claim_pass": False}
+
+
+def run(log=print, out_dirs=DEFAULT_DIRS):
+    rows = []
+    skipped = []
+    for rec in load(out_dirs):
+        t = terms_for(rec)
+        if t is None:
+            skipped.append((rec["arch"], rec["shape"], rec["mesh"],
+                            rec.get("reason", rec.get("error", ""))[:60]))
+            continue
+        rows.append(t)
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    log("# roofline terms per (arch x shape x mesh); seconds per step")
+    log("roofline,arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+        "useful_ratio,roofline_frac")
+    for r in rows:
+        log(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['compute_s']:.3e},{r['memory_s']:.3e},{r['collective_s']:.3e},"
+            f"{r['dominant']},{r['useful_ratio']:.3f},{r['roofline_frac']:.3f}")
+    for s in skipped:
+        log(f"roofline_skipped,{s[0]},{s[1]},{s[2]},{s[3]}")
+    if rows:
+        worst = min((r for r in rows if r["mesh"] == "16x16"),
+                    key=lambda r: r["roofline_frac"], default=None)
+        most_coll = max((r for r in rows if r["mesh"] == "16x16"),
+                        key=lambda r: r["collective_s"], default=None)
+        if worst:
+            log(f"roofline,worst_cell={worst['arch']}/{worst['shape']},"
+                f"frac={worst['roofline_frac']:.3f}")
+        if most_coll:
+            log(f"roofline,most_collective_bound={most_coll['arch']}/"
+                f"{most_coll['shape']},coll_s={most_coll['collective_s']:.3e}")
+    return {"rows": rows, "skipped": skipped}
+
+
+if __name__ == "__main__":
+    run()

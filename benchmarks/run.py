@@ -1,0 +1,61 @@
+"""Benchmark aggregator: one section per paper table/figure + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--only accuracy,speedup,...]
+
+Writes machine-readable results to artifacts/bench/<name>.json alongside the
+printed CSV-ish lines.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks import (
+    accuracy, energy_breakdown, energy_comparison, pairing_ablation, roofline,
+    speedup, vdpe_scaling,
+)
+
+SECTIONS = {
+    "vdpe_scaling": vdpe_scaling.run,       # Fig. 4
+    "energy_breakdown": energy_breakdown.run,  # Fig. 5
+    "energy_comparison": energy_comparison.run,  # Fig. 6
+    "speedup": speedup.run,                 # SIII speedup claim
+    "pairing_ablation": pairing_ablation.run,  # beyond-paper: decorrelation study
+    "accuracy": accuracy.run,               # SIII accuracy claim (trains a model)
+    "roofline": roofline.run,               # assignment SRoofline
+    "roofline_compare": roofline.compare,   # SPerf: baseline vs optimized bounds
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated subset")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = [s for s in args.only.split(",") if s]
+    failures = []
+    for name, fn in SECTIONS.items():
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            result = fn()
+            with open(os.path.join(args.out, name + ".json"), "w") as f:
+                json.dump(result, f, indent=2, default=float)
+            if isinstance(result, dict) and result.get("claim_pass") is False:
+                failures.append(name)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+        print(f"({name}: {time.time() - t0:.1f}s)", flush=True)
+    print("\n===== summary =====")
+    print("benchmarks,failures," + (";".join(failures) if failures else "none"))
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""§III speedup table: ASTRA latency vs every baseline per paper model.
+
+Claim under test: >=7.6x speedup over the best (fastest) state-of-the-art
+accelerator on every model.
+"""
+from __future__ import annotations
+
+from repro.configs import PAPER_MODELS, PAPER_SEQ_LEN, get_arch
+from repro.core.baselines import BASELINES, simulate_baseline
+from repro.core.energy import AstraChipConfig
+from repro.core.simulator import simulate
+
+ACCELS = [b for b in BASELINES if b not in ("cpu", "gpu", "tpu")]
+
+
+def run(log=print):
+    chip = AstraChipConfig()
+    log("# speedup of ASTRA over each platform (x, higher is better)")
+    log("speedup,model,astra_us," + ",".join(BASELINES))
+    out = {}
+    worst = float("inf")
+    for model in PAPER_MODELS:
+        cfg = get_arch(model)
+        seq = PAPER_SEQ_LEN[model]
+        astra = simulate(cfg, chip, seq=seq)
+        sp = {}
+        for b, spec in BASELINES.items():
+            rep = simulate_baseline(spec, cfg, seq)
+            sp[b] = rep.latency_s / astra.latency_s
+        best_accel = min(sp[b] for b in ACCELS)
+        worst = min(worst, best_accel)
+        log(f"speedup,{model},{astra.latency_s * 1e6:.1f}," +
+            ",".join(f"{sp[b]:.1f}" for b in BASELINES))
+        out[model] = {"astra_us": astra.latency_s * 1e6, **sp}
+    ok = worst >= 7.6
+    log(f"speedup,min speedup vs best accelerator={worst:.2f} (>=7.6),"
+        f"{'PASS' if ok else 'FAIL'}")
+    return {"models": out, "min_speedup_vs_best_accel": worst, "claim_pass": bool(ok)}
+
+
+if __name__ == "__main__":
+    run()

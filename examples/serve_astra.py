@@ -1,0 +1,19 @@
+"""End-to-end serving driver example (the paper's workload: inference).
+
+Serves a small model with batched requests through the KV-cache decode path
+under the ASTRA int8 expectation mode, compares generations against the
+fp32 reference, and prints the modeled photonic hardware cost per request.
+
+  PYTHONPATH=src python examples/serve_astra.py [--arch stablelm-1.6b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "stablelm-1.6b", "--reduced",
+        "--batch", "4", "--prompt-len", "32", "--gen", "16",
+        "--mode", "int8", "--compare-exact",
+    ]
+    main(argv)

@@ -1,0 +1,24 @@
+"""ASTRA core: the paper's contribution as a composable JAX module.
+
+Layers (bottom-up):
+  quant      — 8-bit sign-magnitude operand format
+  bitstream  — B-to-S stream generation (thermometer/bresenham/lfsr), packing
+  ossm       — optical stochastic signed multiplier (AND + popcount + sign)
+  vdpe       — homodyne vector dot-product engine (pass tiling, PCA, ADC, noise)
+  photonics  — device-level power/noise budget (Fig. 4)
+  energy     — chip organization + per-component energy constants
+  mapping    — output-stationary layer->VDPE mapping (latency/energy per GEMM)
+  simulator  — whole-model rollup (Fig. 5, per-model latency/energy)
+  baselines  — CPU/GPU/TPU/FPGA/TransPIM/LT/TRON/SCONNA models (Fig. 6)
+  astra_layer— exact | int8 | sc execution modes for the model zoo
+"""
+from repro.core.quant import QTensor, quantize, fake_quant, int8_matmul_exact, MAG_MAX, STREAM_LEN
+from repro.core.astra_layer import ComputeConfig, astra_matmul, EXACT, INT8, SC
+from repro.core.energy import AstraChipConfig
+from repro.core.vdpe import VDPEConfig, sc_matmul
+
+__all__ = [
+    "QTensor", "quantize", "fake_quant", "int8_matmul_exact", "MAG_MAX", "STREAM_LEN",
+    "ComputeConfig", "astra_matmul", "EXACT", "INT8", "SC",
+    "AstraChipConfig", "VDPEConfig", "sc_matmul",
+]

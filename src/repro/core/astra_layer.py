@@ -1,0 +1,75 @@
+"""ASTRA as a first-class execution mode for model matmuls.
+
+``astra_matmul(x, w, mode)`` is the single entry point the model zoo uses
+for every GEMM, so the whole framework can switch between:
+
+* ``exact``  — bf16/f32 reference (training, dry-runs, baselines),
+* ``int8``   — ASTRA *expectation*: symmetric int8 PTQ + integer matmul +
+  dequant.  Bit-identical to the mean of the stochastic process (zero
+  stream-rounding error); this is the deployable TPU fast path and what the
+  dry-run lowers for serving.  Backed by ``repro.kernels.int8_matmul``.
+* ``sc``     — bit-exact 128-bit stochastic stream simulation of the OSSM
+  array (``repro.kernels.stoch_matmul``), used for accuracy validation.
+  ~STREAM_LEN x the bytes of int8 — a validation mode, like the paper's own
+  simulator.
+
+Modes are threaded through the models via :class:`ComputeConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, quantize
+
+MODES = ("exact", "int8", "sc")
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeConfig:
+    mode: str = "exact"
+    x_gen: str = "thermometer"
+    w_gen: str = "bresenham"
+    use_pallas: bool = False  # Pallas kernels (interpret on CPU) vs jnp refs
+    act_scale: Optional[float] = None  # static activation scale (PTQ-calibrated)
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+
+
+EXACT = ComputeConfig("exact")
+INT8 = ComputeConfig("int8")
+SC = ComputeConfig("sc")
+
+
+def astra_matmul(x: jax.Array, w: jax.Array, cc: ComputeConfig = EXACT) -> jax.Array:
+    """[..., K] @ [K, N] under the selected ASTRA execution mode."""
+    if cc.mode == "exact":
+        return jnp.matmul(x, w.astype(x.dtype))
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    xq = quantize(x2, axis=None, scale=cc.act_scale)
+    wq = quantize(w, axis=0)  # per-output-channel
+    if cc.mode == "int8":
+        if cc.use_pallas:
+            from repro.kernels.int8_matmul import ops as int8_ops
+
+            out = int8_ops.int8_matmul(xq, wq)
+        else:
+            from repro.core.quant import int8_matmul_exact
+
+            out = int8_matmul_exact(xq, wq)
+    else:  # sc
+        if cc.use_pallas:
+            from repro.kernels.stoch_matmul import ops as sc_ops
+
+            out = sc_ops.stoch_matmul(xq, wq, x_gen=cc.x_gen, w_gen=cc.w_gen)
+        else:
+            from repro.core.ossm import sc_matmul_value
+
+            out = sc_matmul_value(xq, wq, cc.x_gen, cc.w_gen)
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)

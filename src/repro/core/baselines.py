@@ -1,0 +1,104 @@
+"""Baseline platform models for the paper's comparison set (Fig. 6).
+
+The paper compares ASTRA against CPU, GPU, TPU, FPGA ACC, TransPIM, LT
+(Lightening-Transformer), TRON and SCONNA, normalized to CPU, claiming
+>=7.6x speedup and >=1.3x lower energy vs the best accelerator and >1000x
+energy savings vs CPU/GPU/TPU.
+
+Each baseline is an analytic model: effective throughput = peak * util,
+with *separate* utilization for static-weight GEMMs vs dynamic-operand
+GEMMs (QK^T, PV).  Weight-stationary photonic designs (LT, TRON, SCONNA)
+pay a reconfiguration stall on dynamic operands — exactly the gap ASTRA's
+streamed-both-operands dataflow removes; DAC-based designs pay conversion
+energy per operand element.  Batch-1 transformer inference on CPU/GPU/TPU
+runs at single-digit utilization (latency-bound, published MLPerf-class
+measurements) — that is what the paper's >1000x energy claim reflects.
+
+All constants are representative literature values (# assumed where not in
+the cited source); the *relative* Fig. 6 picture is the validation target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig
+from repro.core.mapping import ElementwiseOp, MatmulOp
+from repro.core.simulator import ModelReport, model_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineSpec:
+    name: str
+    peak_tops: float          # int8 (or equivalent) peak, TOPS (1 MAC = 2 ops)
+    power_w: float            # board/device power while active
+    util_static: float        # achieved fraction of peak on weight GEMMs, batch-1
+    util_dynamic: float       # achieved fraction on dynamic-operand GEMMs
+    conv_j_per_elem: float = 0.0   # DAC/ADC energy per streamed operand element
+    reconfig_s_per_tile: float = 0.0  # weight-stationary reprogram per dynamic tile
+    tile: int = 128
+    kind: str = "electronic"
+    notes: str = ""
+
+
+# fmt: off
+BASELINES: Dict[str, BaselineSpec] = {
+    # General-purpose platforms: batch-1 FP32/bf16 transformer inference at
+    # full board power — the comparison the paper's companion works (SCONNA
+    # [4], ARTEMIS [2]) make for the ">1000x vs CPU/GPU/TPU" style claims.
+    "cpu": BaselineSpec("cpu", peak_tops=3.0, power_w=205.0, util_static=0.004, util_dynamic=0.004,
+                        notes="Xeon-class FP32; batch-1 util  # assumed (MLPerf-class)"),
+    "gpu": BaselineSpec("gpu", peak_tops=31.0, power_w=300.0, util_static=0.02, util_dynamic=0.016,
+                        notes="V100-class FP32 batch-1 (as in [4]); latency-bound  # assumed"),
+    "tpu": BaselineSpec("tpu", peak_tops=90.0, power_w=280.0, util_static=0.012, util_dynamic=0.01,
+                        notes="TPUv3-class bf16 batch-1  # assumed"),
+    # Transformer accelerators.
+    "fpga_acc": BaselineSpec("fpga_acc", peak_tops=1.0, power_w=25.0, util_static=0.45, util_dynamic=0.45,
+                             kind="fpga", notes="FTRANS/NPE-class  # assumed"),
+    "transpim": BaselineSpec("transpim", peak_tops=4.6, power_w=50.0, util_static=0.55, util_dynamic=0.55,
+                             kind="pim", notes="HBM-PIM transformer acc  # assumed [TransPIM, HPCA'22]"),
+    "lt": BaselineSpec("lt", peak_tops=100.0, power_w=90.0, util_static=0.5, util_dynamic=0.35,
+                       conv_j_per_elem=5.2e-12, reconfig_s_per_tile=0.0, kind="photonic",
+                       notes="Lightening-Transformer: dynamic photonic, DAC-heavy  # assumed [LT, HPCA'24]"),
+    "tron": BaselineSpec("tron", peak_tops=30.0, power_w=40.0, util_static=0.5, util_dynamic=0.2,
+                         conv_j_per_elem=3.9e-12, reconfig_s_per_tile=2e-6, kind="photonic",
+                         notes="photonic transformer, partly weight-stationary MRRs (thermal retune)  # assumed [TRON, ISVLSI'23]"),
+    "sconna": BaselineSpec("sconna", peak_tops=250.0, power_w=60.0, util_static=0.6, util_dynamic=0.04,
+                           conv_j_per_elem=1.1e-12, reconfig_s_per_tile=4e-6, kind="photonic",
+                           notes="stochastic photonic CNN acc [4]: weight-stationary MRR banks; "
+                                 "dynamic GEMMs (QK^T/PV) force thermal MRR retuning (~us per tile)"),
+}
+# fmt: on
+
+
+def simulate_baseline(spec: BaselineSpec, cfg: ArchConfig, seq: int, batch: int = 1) -> ModelReport:
+    mm, ew = model_ops(cfg, seq, batch)
+    peak_macs = spec.peak_tops * 1e12 / 2.0
+    latency = 0.0
+    conv_energy = 0.0
+    macs = 0
+    for op in mm:
+        util = spec.util_dynamic if op.dynamic_w else spec.util_static
+        latency += op.macs / (peak_macs * util)
+        if spec.reconfig_s_per_tile and op.dynamic_w:
+            tiles = -(-op.k // spec.tile) * -(-op.n // spec.tile) * op.count
+            latency += tiles * spec.reconfig_s_per_tile
+        if spec.conv_j_per_elem:
+            elems = (op.m * op.k + op.k * op.n + op.m * op.n) * op.count
+            conv_energy += elems * spec.conv_j_per_elem
+        macs += op.macs
+    # elementwise work: electronic platforms fold it into utilization; add
+    # a 5% latency tax for photonic baselines that round-trip to electronics.
+    if spec.kind == "photonic":
+        latency *= 1.05
+    energy = {"platform": latency * spec.power_w, "conversion": conv_energy}
+    return ModelReport(f"{cfg.name}@{spec.name}", latency, energy, macs, [])
+
+
+def compare_all(cfg: ArchConfig, chip, seq: int, batch: int = 1) -> List[ModelReport]:
+    from repro.core.simulator import simulate
+
+    reports = [simulate(cfg, chip, seq, batch)]
+    for spec in BASELINES.values():
+        reports.append(simulate_baseline(spec, cfg, seq, batch))
+    return reports

@@ -1,0 +1,108 @@
+"""Stochastic bit-stream generation — the B-to-S converter (paper Fig. 3).
+
+A magnitude m in 0..127 becomes a 128-bit stream with exactly m ones.  The
+*placement* of the ones is the generator policy; the hardware realizes it
+with an LFSR-driven comparator (classic SC) or a unary counter (SCONNA-style).
+We implement three faithful policies:
+
+* ``thermometer`` — ones in positions [0, m).  Unary counter hardware.
+* ``bresenham``   — m ones evenly spaced: bit_i = ((i+1)*m)//128 - (i*m)//128.
+  This is "clock-division" deterministic SC; ANDed against a thermometer
+  stream the popcount is round(m_x*m_w/128) to within 1 LSB, i.e. the
+  deterministic-SC product used by unary optical accelerators.
+* ``lfsr``        — ones placed at a pseudo-random permutation of positions.
+  A maximal 7-bit LFSR visits every state in 0..126 exactly once per period,
+  so LFSR-comparator hardware also yields *exactly* m ones per 128-cycle
+  window — variance comes only from stream *pairing*, which this models.
+
+Streams are packed little-endian into 4 uint32 words per operand:
+``packed[..., w] bit b`` is stream position ``32*w + b``.
+
+ASTRA's OSSM pairs an X stream with a W stream through an optical AND gate;
+sign bits ride separately (XOR at the transducer).  See ``core/ossm.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import MAG_MAX, STREAM_LEN
+
+N_WORDS = STREAM_LEN // 32  # 4
+
+# A fixed permutation of 0..127 modelling the LFSR visit order.  Generated
+# once from a 7-bit maximal LFSR (taps x^7 + x^6 + 1), state 0 appended last.
+def _lfsr_order() -> tuple:
+    state, order = 1, []
+    for _ in range(127):
+        order.append(state)
+        bit = ((state >> 6) ^ (state >> 5)) & 1
+        state = ((state << 1) | bit) & 0x7F
+    order.append(0)
+    return tuple(order)
+
+
+LFSR_ORDER = _lfsr_order()
+
+
+def _positions() -> jax.Array:
+    return jnp.arange(STREAM_LEN, dtype=jnp.int32)
+
+
+def stream_bits(mag: jax.Array, generator: str = "bresenham", phase: int = 0) -> jax.Array:
+    """Magnitudes (int, 0..127, any shape) -> bits (..., 128) int32 in {0,1}.
+
+    ``phase`` rotates the stream — hardware staggers LFSR seeds / counter
+    phases across lanes to decorrelate; tests sweep it.
+    """
+    mag = jnp.asarray(mag, jnp.int32)
+    i = (_positions() + phase) % STREAM_LEN  # (128,)
+    m = mag[..., None]  # (..., 1)
+    if generator == "thermometer":
+        bits = (i < m).astype(jnp.int32)
+    elif generator == "bresenham":
+        # +STREAM_LEN//2 counter preset: ANDed against a thermometer stream
+        # the popcount becomes round(m_x*m_w/128) instead of floor — exact
+        # round-to-nearest deterministic SC, free in hardware (counter init).
+        off = STREAM_LEN // 2
+        bits = (((i + 1) * m + off) // STREAM_LEN - (i * m + off) // STREAM_LEN).astype(jnp.int32)
+    elif generator == "lfsr":
+        order = jnp.asarray(LFSR_ORDER, jnp.int32)
+        bits = (order[i] < m).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown generator {generator!r}")
+    return bits
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """(..., 128) {0,1} -> (..., 4) uint32, little-endian within words."""
+    b = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], N_WORDS, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array) -> jax.Array:
+    """(..., 4) uint32 -> (..., 128) int32 {0,1}."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*packed.shape[:-1], STREAM_LEN).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("generator", "phase"))
+def encode(mag: jax.Array, generator: str = "bresenham", phase: int = 0) -> jax.Array:
+    """Magnitudes -> packed streams (..., 4) uint32.  The B-to-S circuit."""
+    return pack_bits(stream_bits(mag, generator, phase))
+
+
+def popcount(packed: jax.Array, axis: int = -1) -> jax.Array:
+    """Total set bits across the word axis (the PCA charge count)."""
+    return jnp.sum(jax.lax.population_count(packed).astype(jnp.int32), axis=axis)
+
+
+def encode_signed(q: jax.Array, generator: str = "bresenham", phase: int = 0):
+    """int8 two's-complement -> (packed_mag (...,4) uint32, sign (...,) int32 {+1,-1})."""
+    mag = jnp.abs(q).astype(jnp.int32)
+    sign = jnp.where(q < 0, -1, 1).astype(jnp.int32)
+    return encode(mag, generator, phase), sign

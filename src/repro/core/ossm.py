@@ -1,0 +1,72 @@
+"""OSSM — Optical Stochastic Signed Multiplier (paper Fig. 1).
+
+One OSSM multiplies an activation by a weight:
+
+  1. both int8 operands are split into sign + 7-bit magnitude,
+  2. magnitudes become 128-bit streams (B-to-S, ``core.bitstream``),
+  3. the streams meet in an optical AND gate (OAG, Fig. 2): light passes in
+     cycle t iff X_t AND W_t — the photodetector charge over the window is
+     popcount(X & W),
+  4. the sign is XOR(sign_x, sign_w), steering the charge onto the positive
+     or negative rail of the balanced transducer.
+
+With the deterministic pairing (thermometer x bresenham) the charge equals
+round(m_x * m_w / 128) within 1 LSB — SC *without* random error; with LFSR
+pairing it is the classic stochastic estimate.  ``ossm_multiply`` is the
+bit-exact functional model used by tests and the accuracy study; the hot
+path lives in ``repro.kernels.stoch_matmul``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitstream import encode_signed, popcount, STREAM_LEN
+from repro.core.quant import QTensor
+
+# Default stream pairing: X thermometer (unary counter on the activation
+# serializer), W bresenham (clock-divided weight stream).  This is the
+# deterministic-SC configuration ASTRA's accuracy numbers imply.
+X_GEN = "thermometer"
+W_GEN = "bresenham"
+
+
+@functools.partial(jax.jit, static_argnames=("x_gen", "w_gen"))
+def ossm_multiply(qx: jax.Array, qw: jax.Array, x_gen: str = X_GEN, w_gen: str = W_GEN) -> jax.Array:
+    """Elementwise signed stochastic product, in integer popcount units.
+
+    qx, qw: int8 arrays (broadcastable).  Returns int32 approximating
+    qx*qw/128.  Multiply by 128*scale_x*scale_w to get real values.
+    """
+    xs, sx = encode_signed(qx, x_gen)
+    ws, sw = encode_signed(qw, w_gen)
+    pc = popcount(xs & ws)
+    return pc * (sx * sw)
+
+
+def ossm_expected(qx: jax.Array, qw: jax.Array) -> jax.Array:
+    """The mathematical expectation of the OSSM (no stream rounding)."""
+    return qx.astype(jnp.int32) * qw.astype(jnp.int32)
+
+
+def sc_dot(qx: jax.Array, qw: jax.Array, x_gen: str = X_GEN, w_gen: str = W_GEN) -> jax.Array:
+    """Dot product of int8 vectors through OSSMs + ideal analog accumulation.
+
+    The PCA integrates all lane photocurrents linearly, so accumulation is an
+    exact signed integer sum of per-lane popcounts.  Result approximates
+    dot(qx, qw)/128 in popcount units.
+    """
+    return jnp.sum(ossm_multiply(qx, qw, x_gen, w_gen), axis=-1)
+
+
+def sc_matmul_value(xq: QTensor, wq: QTensor, x_gen: str = X_GEN, w_gen: str = W_GEN) -> jax.Array:
+    """Full stochastic matmul, dequantized: [..., K] @ [K, N] -> [..., N].
+
+    Bit-exact but memory-heavy (materializes [..., K, N] popcounts) — the
+    oracle for the Pallas kernel and for small-model accuracy studies.
+    """
+    prod = ossm_multiply(xq.q[..., :, None], wq.q[None, ...], x_gen, w_gen)  # [..., K, N]
+    acc = jnp.sum(prod, axis=-2)  # analog accumulation over K
+    return acc.astype(jnp.float32) * STREAM_LEN * xq.scale * wq.scale

@@ -1,0 +1,100 @@
+"""8-bit sign-magnitude quantization — ASTRA's operand format (paper §III).
+
+ASTRA streams both matmul operands through B-to-S converters, so *both*
+activations and weights are quantized to 8 bits: a sign bit plus a 7-bit
+magnitude (0..127) whose value becomes the density of a 128-bit stochastic
+stream.  ``quantize`` produces standard two's-complement int8 in [-127, 127]
+(the -128 code is unused, exactly as in sign-magnitude hardware); the
+stream encoder takes ``abs`` and ``sign`` of it.
+
+Weights use per-output-channel scales, activations per-tensor scales —
+the usual PTQ recipe that the paper's "within 1.2% of FP32" result implies.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+MAG_MAX = 127  # 7-bit magnitude
+STREAM_LEN = 128  # bits per stochastic stream (paper: 128-bit + sign)
+
+
+class QTensor(NamedTuple):
+    """Quantized tensor: int8 values + float scale (broadcastable)."""
+
+    q: jax.Array  # int8, in [-127, 127]
+    scale: jax.Array  # f32, broadcastable to q.shape
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+def _safe_scale(amax: jax.Array) -> jax.Array:
+    amax = jnp.asarray(amax, jnp.float32)
+    return jnp.where(amax > 0, amax / MAG_MAX, 1.0)
+
+
+def quantize(x: jax.Array, axis: Optional[int] = None, scale: Optional[jax.Array] = None) -> QTensor:
+    """Symmetric int8 quantization.
+
+    axis=None -> per-tensor scale; axis=k -> per-channel along k (scale shape
+    keeps dims for broadcasting).  ``scale`` overrides calibration (static
+    activation scales harvested offline).
+    """
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        if axis is None:
+            amax = jnp.max(jnp.abs(xf))
+        else:
+            amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+        scale = _safe_scale(amax)
+    q = jnp.clip(jnp.round(xf / scale), -MAG_MAX, MAG_MAX).astype(jnp.int8)
+    return QTensor(q, jnp.asarray(scale, jnp.float32))
+
+
+def fake_quant(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient (QAT option)."""
+    qt = quantize(jax.lax.stop_gradient(x), axis=axis)
+    y = qt.dequantize().astype(x.dtype)
+    return x + jax.lax.stop_gradient(y - x)
+
+
+class Calibrator:
+    """Running absmax calibration for static activation scales (PTQ).
+
+    Functional: ``state = Calibrator.init(); state = observe(state, x)``;
+    EMA of per-tensor absmax, as used for the serving path's static scales.
+    """
+
+    decay = 0.99
+
+    @staticmethod
+    def init() -> jax.Array:
+        return jnp.zeros((), jnp.float32)
+
+    @staticmethod
+    def observe(state: jax.Array, x: jax.Array) -> jax.Array:
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+        return jnp.where(state == 0, amax, Calibrator.decay * state + (1 - Calibrator.decay) * amax)
+
+    @staticmethod
+    def scale(state: jax.Array) -> jax.Array:
+        return _safe_scale(state)
+
+
+def int8_matmul_exact(xq: QTensor, wq: QTensor) -> jax.Array:
+    """Reference integer matmul + dequant — the *expectation* of ASTRA's
+    stochastic computation (zero stream-rounding error).  [..., K] @ [K, N].
+    """
+    acc = jax.lax.dot_general(
+        xq.q, wq.q,
+        dimension_numbers=(((xq.q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * xq.scale * wq.scale

@@ -1,0 +1,107 @@
+"""VDPE — homodyne Vector Dot-Product Engine (paper Fig. 3).
+
+A VDPE holds up to 1024 OSSMs on a single wavelength; the photocurrents of
+all lanes integrate on one photo-charge accumulator (PCA), i.e. the
+accumulation across the K dimension is *analog and free*.  Longer dot
+products are tiled into ceil(K/lanes) passes; the PCA keeps integrating
+across passes (output-stationary), and a single ADC digitizes the final
+value ("limiting ADC use to final outputs").
+
+This module is the *noise-aware functional* model: exact integer popcount
+math (matching ``repro.kernels.stoch_matmul``) plus optional shot-noise /
+ADC-resolution effects from ``core.photonics`` for the Fig. 4 accuracy
+study.  Inference-only; the deployable fast path is ``core.astra_layer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import photonics
+from repro.core.bitstream import STREAM_LEN
+from repro.core.ossm import ossm_multiply, X_GEN, W_GEN
+from repro.core.quant import QTensor
+
+
+@dataclasses.dataclass(frozen=True)
+class VDPEConfig:
+    lanes: int = 1024
+    x_gen: str = X_GEN
+    w_gen: str = W_GEN
+    adc_bits: int = 8
+    noisy: bool = False
+    photonic: photonics.PhotonicParams = dataclasses.field(default_factory=photonics.PhotonicParams)
+
+
+def _pad_to_lanes(q: jax.Array, lanes: int, axis: int) -> jax.Array:
+    pad = (-q.shape[axis]) % lanes
+    if pad == 0:
+        return q
+    widths = [(0, 0)] * q.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(q, widths)
+
+
+def sc_matmul(
+    xq: QTensor,
+    wq: QTensor,
+    cfg: VDPEConfig = VDPEConfig(),
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Stochastic matmul through pass-tiled VDPEs: [M, K] @ [K, N] -> [M, N].
+
+    Bit-exact popcount math; if ``cfg.noisy`` adds per-pass Gaussian shot
+    noise (sigma from the photonic model, in popcount units) and quantizes
+    the final accumulated value through the output ADC.
+    """
+    qx, qw = xq.q, wq.q
+    m_dim, k_dim = qx.shape
+    k2, n_dim = qw.shape
+    assert k_dim == k2, (qx.shape, qw.shape)
+    lanes = cfg.lanes
+    qx = _pad_to_lanes(qx, lanes, 1)
+    qw = _pad_to_lanes(qw, lanes, 0)
+    n_pass = qx.shape[1] // lanes
+    xp = jnp.moveaxis(qx.reshape(m_dim, n_pass, lanes), 1, 0)  # [P, M, lanes]
+    wp = qw.reshape(n_pass, lanes, n_dim)  # [P, lanes, N]
+    if cfg.noisy and key is None:
+        key = jax.random.PRNGKey(0)
+    # signal-dependent shot noise: the balanced PD rails integrate
+    # N_e = |popcount| * electrons_per_bit photo-electrons; Poisson =>
+    # sigma_popcount = sqrt(total_|counts| / electrons_per_bit).
+    n_e = photonics.electrons_per_bit(cfg.photonic)
+
+    def one_pass(acc, xs):
+        x_t, w_t, idx = xs
+        # [M, lanes, 1] x [1, lanes, N] -> popcounts [M, lanes, N]
+        prod = ossm_multiply(x_t[:, :, None], w_t[None], cfg.x_gen, cfg.w_gen)
+        pass_sum = jnp.sum(prod, axis=1).astype(jnp.float32)  # analog PCA integration
+        if cfg.noisy:
+            abs_counts = jnp.sum(jnp.abs(prod), axis=1).astype(jnp.float32)
+            sigma = jnp.sqrt(abs_counts / n_e)
+            noise = sigma * jax.random.normal(jax.random.fold_in(key, idx), pass_sum.shape)
+            pass_sum = pass_sum + noise
+        return acc + pass_sum, None
+
+    acc0 = jnp.zeros((m_dim, n_dim), jnp.float32)
+    acc, _ = jax.lax.scan(one_pass, acc0, (xp, wp, jnp.arange(n_pass)))
+
+    if cfg.noisy:
+        # single output ADC: digitize accumulated charge to adc_bits over the
+        # observed dynamic range (hardware calibrates PGA gain the same way).
+        rng = jnp.maximum(jnp.max(jnp.abs(acc)), 1.0)
+        step = 2 * rng / (2**cfg.adc_bits)
+        acc = jnp.round(acc / step) * step
+    # popcount units -> real values
+    return acc * STREAM_LEN * xq.scale * wq.scale
+
+
+def sc_matmul_error(xq: QTensor, wq: QTensor, cfg: VDPEConfig, exact: jax.Array, key=None) -> float:
+    """Relative L2 error of the SC result vs exact float matmul (Fig. 4)."""
+    approx = sc_matmul(xq, wq, cfg, key=key)
+    num = jnp.linalg.norm(approx - exact)
+    den = jnp.maximum(jnp.linalg.norm(exact), 1e-9)
+    return float(num / den)

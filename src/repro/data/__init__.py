@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLMDataset, Prefetcher, make_batch_iterator
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "Prefetcher", "make_batch_iterator"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for ASTRA's compute hot-spots.
+
+Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jitted public wrapper) and ``ref.py`` (pure-jnp oracle):
+
+* ``stoch_matmul``   — the OSSM array: packed-bitstream AND+popcount matmul
+* ``bts_encode``     — B-to-S converter bank (int8 -> packed 128-bit streams)
+* ``int8_matmul``    — ASTRA expectation fast path (MXU int8, output-stationary)
+* ``flash_attention``— streaming-softmax attention (causal + sliding window)
+* ``rglru_scan``     — chunked linear recurrence for RG-LRU/SSM blocks
+
+Kernels target TPU (VMEM BlockSpecs, 128-aligned tiles) and are validated
+on CPU with ``interpret=True``.
+"""

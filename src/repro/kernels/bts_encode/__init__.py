@@ -1,0 +1,1 @@
+from repro.kernels.bts_encode.ops import bts_encode

@@ -1,0 +1,9 @@
+"""Oracle: core.bitstream.encode_signed (the functional B-to-S model)."""
+import jax.numpy as jnp
+
+from repro.core.bitstream import encode_signed
+
+
+def bts_encode_ref(q, generator="bresenham"):
+    words, sign = encode_signed(q, generator)
+    return words, sign.astype(jnp.int8)

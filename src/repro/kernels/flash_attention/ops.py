@@ -1,0 +1,52 @@
+"""Public flash-attention wrapper: GQA folding, padding, head layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    scale = d ** -0.5
+    # GQA: repeat KV heads to match Q heads, then fold (B, H) -> BH
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hq, sk, d)
+    vf = v.reshape(b * hq, sk, d)
+    # pad sequence dims to block multiples; padded keys are masked by causal
+    # + explicit key-validity (padded queries discarded on slice-out)
+    pq, pk = (-sq) % bq, (-sk) % bk
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+    eff_window = window
+    if not causal and pk:
+        # non-causal path must not attend to padded keys; emulate with a
+        # window covering exactly the valid span (encoder use is full-span)
+        raise NotImplementedError("non-causal padding unsupported; pad inputs to block size")
+    o, _, _ = flash_attention_kernel(
+        qf, kf, vf, scale=scale, causal=causal, window=eff_window, bq=bq, bk=bk, interpret=interpret
+    )
+    return o[:, :sq].reshape(b, hq, sq, d).astype(q.dtype)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: masked softmax attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale, causal=True, window=0):
+    """q [BH, Sq, D], k/v [BH, Sk, D] -> [BH, Sq, D] (fp32).
+
+    When Sq < Sk (decode/chunked prefill) queries are right-aligned:
+    query i sits at absolute position Sk - Sq + i.
+    """
+    q, k, v = (x.astype(jnp.float32) for x in (q, k, v))
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None], p, 0.0)
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p / denom, v)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the int8 matmul kernel."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor
+
+
+def int8_matmul_acc_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int8 [M,K] @ [K,N] -> int32 accumulator."""
+    return jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def int8_matmul_ref(xq: QTensor, wq: QTensor) -> jax.Array:
+    acc = int8_matmul_acc_ref(xq.q, wq.q)
+    return acc.astype(jnp.float32) * xq.scale * wq.scale

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: sequential linear recurrence via lax.scan."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0=None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: [B, S, D]."""
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), a.dtype)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,1 @@
+from repro.kernels.stoch_matmul.ops import stoch_matmul, stoch_matmul_packed

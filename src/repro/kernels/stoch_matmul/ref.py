@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the stochastic matmul kernel.
+
+Built directly on the bit-exact OSSM functional model (core.ossm /
+core.bitstream) — unpacks streams, ANDs, popcounts, signed-sums.  Slow and
+memory-heavy by design; the kernel must match it bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitstream import unpack_bits
+from repro.core.ossm import X_GEN, W_GEN
+from repro.core.bitstream import encode_signed
+from repro.core.quant import QTensor, STREAM_LEN
+
+
+def stoch_matmul_packed_ref(xs, sx, ws, sw) -> jax.Array:
+    """Same layout as the kernel: xs [M,K,4], ws [N,K,4] (K-contiguous)."""
+    xb = unpack_bits(xs)  # [M, K, 128]
+    wb = unpack_bits(ws)  # [N, K, 128]
+    pc = jnp.einsum("mkb,nkb->mnk", xb, wb)  # AND == product of {0,1}
+    s = sx.astype(jnp.int32)[:, None, :] * sw.astype(jnp.int32)[None, :, :]
+    return jnp.sum(pc * s, axis=-1).astype(jnp.int32)
+
+
+def encode_operands(xq: jax.Array, wq: jax.Array, x_gen: str = X_GEN, w_gen: str = W_GEN):
+    """int8 [M,K] x [K,N] -> kernel layout (xs, sx, ws, sw)."""
+    xs, sx = encode_signed(xq, x_gen)
+    ws, sw = encode_signed(wq.T, w_gen)  # [N, K, 4]
+    return xs, sx.astype(jnp.int8), ws, sw.astype(jnp.int8)
+
+
+def stoch_matmul_ref(xq: QTensor, wq: QTensor, x_gen: str = X_GEN, w_gen: str = W_GEN) -> jax.Array:
+    """End-to-end reference: quantized operands -> dequantized float output."""
+    xs, sx, ws, sw = encode_operands(xq.q, wq.q, x_gen, w_gen)
+    acc = stoch_matmul_packed_ref(xs, sx, ws, sw)
+    return acc.astype(jnp.float32) * STREAM_LEN * xq.scale * wq.scale

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e-256,
+("data", "model")).  Multi-pod: 2 pods x 256 = 512 chips with the leading
+"pod" axis mapped onto the inter-pod (DCN) dimension — only pure-DP
+collectives (gradient all-reduce) should cross it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))

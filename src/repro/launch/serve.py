@@ -1,0 +1,110 @@
+"""Batched serving driver with the ASTRA execution modes.
+
+Inference is the paper's target workload: this driver prefills a batch of
+prompts, then decodes greedily with the KV/recurrent-state caches, under any
+of the three ASTRA numeric modes:
+
+  exact — bf16 reference            (accuracy oracle)
+  int8  — ASTRA expectation path    (deployable quantized fast path)
+  sc    — bit-true 128-bit streams  (the paper's stochastic arithmetic)
+
+Alongside tokens/s it reports the *modeled* ASTRA chip latency/energy for
+the same workload via ``core.simulator`` — the numbers Figs. 5/6 are built
+from — so one command shows both numerical fidelity and the hardware story.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+      --batch 4 --prompt-len 32 --gen 16 --mode int8 --compare-exact
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.astra_layer import ComputeConfig
+from repro.core.energy import AstraChipConfig
+from repro.core.simulator import simulate
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.models.transformer import ModelOptions
+
+
+def generate(model: Model, params, prompts: jax.Array, gen_len: int, max_len: int):
+    """Greedy decode. prompts [B, S0] (or [B, C, S0]).  Returns tokens, t/s."""
+    cfg = model.cfg
+    b = prompts.shape[0]
+    s0 = prompts.shape[-1]
+    # feed the prompt through decode steps against a max_len-preallocated
+    # state (robust across KV / ring-buffer / recurrent archs), then sample
+    states = model.init_decode_state(b, max_len)
+    decode = jax.jit(model.decode)
+    logits = None
+    for t in range(s0):
+        tok_t = prompts[..., t : t + 1]
+        logits, states = decode(params, tok_t, states, jnp.int32(t))
+    out = [prompts]
+    t0 = time.time()
+    next_tok = jnp.argmax(logits[..., -1:, :], axis=-1).astype(jnp.int32)
+    if cfg.n_codebooks:
+        next_tok = jnp.swapaxes(next_tok, -1, -2)  # [B, C, 1]
+    for t in range(s0, s0 + gen_len):
+        out.append(next_tok)
+        logits, states = decode(params, next_tok, states, jnp.int32(t))
+        next_tok = jnp.argmax(logits[..., -1:, :], axis=-1).astype(jnp.int32)
+        if cfg.n_codebooks:
+            next_tok = jnp.swapaxes(next_tok, -1, -2)
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    toks = jnp.concatenate(out, axis=-1)
+    return toks, (b * gen_len) / dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mode", default="int8", choices=["exact", "int8", "sc"])
+    ap.add_argument("--compare-exact", action="store_true",
+                    help="also run exact mode and report token agreement")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    max_len = args.prompt_len + args.gen + 1
+
+    base_model = Model(cfg, ModelOptions())
+    params = base_model.init(key)
+    shape = (args.batch, cfg.n_codebooks, args.prompt_len) if cfg.n_codebooks else (args.batch, args.prompt_len)
+    prompts = jax.random.randint(key, shape, 0, cfg.vocab, jnp.int32)
+
+    model = Model(cfg, ModelOptions(cc=ComputeConfig(args.mode)))
+    toks, tps = generate(model, params, prompts, args.gen, max_len)
+    print(f"[{args.mode}] generated {args.gen} tokens x batch {args.batch}: {tps:.1f} tok/s")
+
+    if args.compare_exact and args.mode != "exact":
+        toks_ref, _ = generate(base_model, params, prompts, args.gen, max_len)
+        agree = float(jnp.mean((toks == toks_ref).astype(jnp.float32)))
+        print(f"token agreement vs exact: {agree * 100:.2f}%")
+
+    # hardware story: modeled ASTRA latency/energy for this workload
+    chip = AstraChipConfig()
+    rep = simulate(cfg, chip, seq=args.prompt_len + args.gen, batch=args.batch)
+    print(f"ASTRA model: latency {rep.latency_s * 1e3:.3f} ms, "
+          f"energy {rep.total_energy_j * 1e3:.3f} mJ, "
+          f"{rep.macs / 1e9:.2f} GMACs ({rep.energy_per_mac_j * 1e12:.3f} pJ/MAC)")
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Composable model zoo: every assigned architecture from one block library."""
+from repro.models.model import Model, ModelOptions
+
+__all__ = ["Model", "ModelOptions"]

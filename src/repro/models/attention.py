@@ -1,0 +1,195 @@
+"""Attention blocks: global causal GQA, sliding-window local, cross-attention.
+
+Three entry points per block:
+  * ``attn_seq``    — full-sequence (training / prefill); optionally emits the
+    KV cache for serving.
+  * ``attn_decode`` — one-token step against a pre-allocated KV cache
+    (global: [B, kv, S_max, hd] with position write; local: ring buffer of
+    ``window``; cross: static frontend KV, read-only).
+
+The softmax attention itself defaults to jnp einsum (XLA-native; gives the
+dry-run an honest FLOP/byte profile) and can be swapped for the Pallas
+flash kernel (``use_flash``) — both validated against each other in tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.models.layers import apply_rope, dense, dense_init
+from repro.parallel.sharding import shard_act
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, n_kv, S_cache, hd]
+    v: jax.Array  # [B, n_kv, S_cache, hd]
+
+
+def attn_init(key, cfg: ArchConfig, cross: bool = False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.q_dim, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.q_dim, cfg.d_model),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)  # [B, n, S, hd]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, n, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, n * hd)
+
+
+def _sdpa(q, k, v, *, causal: bool, window: int, q_offset: int | jax.Array = 0,
+          kv_len: Optional[jax.Array] = None, softcap: float = 0.0) -> jax.Array:
+    """jnp attention. q [B,H,Sq,hd], k/v [B,KV,Sk,hd]; GQA via head groups."""
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, hd)
+    # keep operands in their storage dtype and accumulate in f32 via
+    # preferred_element_type: avoids materializing an f32 copy of the whole
+    # KV cache every decode step (2x cache bytes on the memory roofline)
+    s = jnp.einsum("bkgqd,bkld->bkgql", qg, k.astype(qg.dtype),
+                   preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgql,bkld->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def attn_seq(
+    p,
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    *,
+    kind: str,  # attn | local | xattn
+    cc: ComputeConfig = EXACT,
+    use_flash: bool = False,
+    positions: Optional[jax.Array] = None,
+    kv_src: Optional[jax.Array] = None,  # cross-attn memory [B, T, D]
+    return_cache: bool = False,
+    max_len: Optional[int] = None,  # pre-allocated cache length for serving
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    src = kv_src if kind == "xattn" else x
+    q = _split_heads(dense(p["wq"], x, cc), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(dense(p["wk"], src, cc), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(p["wv"], src, cc), cfg.n_kv_heads, cfg.head_dim)
+    q = shard_act(q, ("batch", "heads", None, None))
+    k = shard_act(k, ("batch", "heads", None, None))
+    v = shard_act(v, ("batch", "heads", None, None))
+    if kind != "xattn":
+        q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
+    causal = kind != "xattn"
+    window = cfg.window if kind == "local" else 0
+    if use_flash and kind != "xattn":
+        from repro.kernels.flash_attention import flash_attention
+
+        o = flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        o = _sdpa(q, k, v, causal=causal, window=window, softcap=cfg.logit_softcap)
+    o = shard_act(o, ("batch", "heads", None, None))
+    out = shard_act(dense(p["wo"], _merge_heads(o), cc), ("batch", None, None))
+    cache = None
+    if return_cache:
+        cache = _make_cache(k, v, kind, cfg, s, max_len)
+    return out, cache
+
+
+def _make_cache(k, v, kind: str, cfg: ArchConfig, s: int, max_len: Optional[int]) -> KVCache:
+    """Build the serving cache. Global: padded to max_len (decode writes at
+    slot=pos).  Local: ring of size ``window`` where absolute position t
+    lives at slot t % window (decode keeps writing at pos % window)."""
+    if kind == "local" and cfg.window:
+        w = cfg.window
+        if s >= w:
+            last_k, last_v = k[:, :, -w:], v[:, :, -w:]
+            shift = s % w
+            return KVCache(jnp.roll(last_k, shift, axis=2), jnp.roll(last_v, shift, axis=2))
+        pad = w - s
+        return KVCache(
+            jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+            jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
+        )
+    if kind == "xattn":
+        return KVCache(k, v)
+    tgt = max(max_len or 0, s + 1)
+    pad = tgt - s
+    return KVCache(
+        jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+        jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
+    )
+
+
+def init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    if kind == "local" and cfg.window:
+        max_len = min(max_len, cfg.window)
+    if kind == "xattn":
+        max_len = cfg.vision_tokens
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attn_decode(
+    p,
+    x: jax.Array,  # [B, 1, D]
+    cache: KVCache,
+    pos: jax.Array,  # [] int32 — absolute position of the new token
+    cfg: ArchConfig,
+    *,
+    kind: str,
+    cc: ComputeConfig = EXACT,
+) -> Tuple[jax.Array, KVCache]:
+    b = x.shape[0]
+    q = shard_act(
+        _split_heads(dense(p["wq"], x, cc), cfg.n_heads, cfg.head_dim),
+        ("batch", "heads", None, None),
+    )
+    posb = jnp.broadcast_to(pos[None, None], (b, 1))
+    if kind == "xattn":
+        # static frontend KV; no rope, full visibility
+        o = _sdpa(q, cache.k, cache.v, causal=False, window=0, softcap=cfg.logit_softcap)
+        return dense(p["wo"], _merge_heads(o), cc), cache
+    k_new = _split_heads(dense(p["wk"], x, cc), cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(dense(p["wv"], x, cc), cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, posb, cfg.rope_pct, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_pct, cfg.rope_theta)
+    s_cache = cache.k.shape[2]
+    # global caches are pre-allocated >= pos+1 (no wrap); local rings wrap
+    slot = pos % s_cache if kind == "local" else pos
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, 0, slot, 0))
+    if kind == "local":
+        # ring buffer: every resident entry is within the window; valid count
+        kv_len = jnp.minimum(pos + 1, s_cache)
+        o = _sdpa(q, k, v, causal=False, window=0, kv_len=kv_len, softcap=cfg.logit_softcap)
+    else:
+        o = _sdpa(q, k, v, causal=False, window=0, kv_len=pos + 1, softcap=cfg.logit_softcap)
+    out = dense(p["wo"], _merge_heads(o), cc)
+    return out, KVCache(k, v)

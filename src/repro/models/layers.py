@@ -1,0 +1,135 @@
+"""Shared neural building blocks (pure JAX, functional params-as-pytrees).
+
+All GEMMs route through :func:`dense` -> ``core.astra_matmul`` so the whole
+zoo switches between exact / int8 / stochastic ASTRA execution modes.
+Parameters are plain nested dicts; leaf names drive the sharding rules in
+``repro.parallel.sharding`` (see that module's table).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.astra_layer import ComputeConfig, EXACT, astra_matmul
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p, x: jax.Array, cc: ComputeConfig = EXACT) -> jax.Array:
+    y = astra_matmul(x, p["w"], cc)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def norm_init(d: int, kind: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, pct: float, theta: float) -> jax.Array:
+    rot_dim = int(head_dim * pct) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, pct: float, theta: float) -> jax.Array:
+    """x [B, H, S, D], positions [B, S] (absolute)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, pct, theta)  # [rot/2]
+    rot = freqs.shape[0] * 2
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,S,rot/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(*x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1) if rot < d else y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLP
+def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, cfg.d_model, d_ff), "down": dense_init(k2, d_ff, cfg.d_model)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k3, cfg.d_model, d_ff)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, cfg: ArchConfig, cc: ComputeConfig = EXACT) -> jax.Array:
+    from repro.parallel.sharding import shard_act
+
+    up = dense(p["up"], x, cc)
+    if "gate" in p:
+        g = dense(p["gate"], x, cc)
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard_act(h, ("batch", None, "ffn"))
+    return shard_act(dense(p["down"], h, cc), ("batch", None, None))
+
+
+# ----------------------------------------------------------------- embeddings
+def embedding_init(key, cfg: ArchConfig):
+    n_emb = max(1, cfg.n_codebooks or 1)
+    tables = jax.random.normal(key, (n_emb, cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+    p = {"table": tables[0] if n_emb == 1 else tables}
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """tokens [B, S] (or [B, C, S] multi-codebook) -> [B, S, D]."""
+    if cfg.n_codebooks:
+        # sum of per-codebook embeddings (MusicGen): tokens [B,C,S], table [C,V,D]
+        x = sum(p["table"][c][tokens[:, c]] for c in range(cfg.n_codebooks))
+        return x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    x = p["table"][tokens]
+    return x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+
+def head_init(key, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return {}
+    n_heads = max(1, cfg.n_codebooks or 1)
+    w = jax.random.normal(key, (n_heads, cfg.d_model, cfg.vocab), jnp.float32) / math.sqrt(cfg.d_model)
+    return {"w": w[0] if n_heads == 1 else w}
+
+
+def head_apply(p, emb_p, x: jax.Array, cfg: ArchConfig, cc: ComputeConfig = EXACT) -> jax.Array:
+    """x [B, S, D] -> logits [B, S, V] (or [B, S, C, V])."""
+    if cfg.tie_embeddings:
+        w = emb_p["table"].T  # [D, V]
+        return astra_matmul(x, w, cc).astype(jnp.float32)
+    w = p["w"]
+    if cfg.n_codebooks:
+        return jnp.stack([astra_matmul(x, w[c], cc) for c in range(cfg.n_codebooks)], axis=2).astype(jnp.float32)
+    return astra_matmul(x, w, cc).astype(jnp.float32)

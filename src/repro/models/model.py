@@ -1,0 +1,105 @@
+"""Model facade: init / loss / train_step / prefill / decode + input specs.
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+model input of a given assignment cell — the dry-run lowers against these
+(weak-type-correct, shardable, no device allocation).  Modality frontends
+are stubs per the assignment: MusicGen gets the EnCodec token grid,
+Llama-Vision gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.transformer import (
+    ModelOptions, decode_step, forward, init_decode_state, init_params,
+)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 0.0):
+    """logits [..., V] fp32, labels [...] int32 with -1 = masked."""
+    valid = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0] - logz
+    loss = -(ll * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+    if z_loss:
+        loss = loss + z_loss * ((logz**2) * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+    return loss
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    opts: ModelOptions = ModelOptions()
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Dict[str, Any]:
+        return init_params(key, self.cfg)
+
+    def param_shapes(self) -> Dict[str, Any]:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------- train
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        tokens = batch["tokens"]
+        logits, aux, _ = forward(
+            params, tokens, self.cfg, self.opts, vision_embeds=batch.get("vision_embeds")
+        )
+        if self.cfg.n_codebooks:
+            # tokens [B, C, S], logits [B, S, C, V]: shift along S per codebook
+            labels = tokens[:, :, 1:].transpose(0, 2, 1)  # [B, S-1, C]
+            loss = cross_entropy(logits[:, :-1], labels, self.opts.z_loss)
+        else:
+            loss = cross_entropy(logits[:, :-1], tokens[:, 1:], self.opts.z_loss)
+        loss = loss + aux
+        return loss, {"loss": loss, "aux": aux}
+
+    # ------------------------------------------------------------- serve
+    def prefill(self, params, batch):
+        logits, _, states = forward(
+            params, batch["tokens"], self.cfg, self.opts,
+            vision_embeds=batch.get("vision_embeds"), return_states=True,
+        )
+        return logits, states
+
+    def decode(self, params, token, states, pos):
+        return decode_step(params, token, states, pos, self.cfg, self.opts)
+
+    def init_decode_state(self, batch: int, max_len: int):
+        return init_decode_state(self.cfg, batch, max_len)
+
+
+# ---------------------------------------------------------------- specs
+def _tok_spec(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.n_codebooks:
+        return jax.ShapeDtypeStruct((batch, cfg.n_codebooks, seq), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Model-input stand-ins for one assignment cell.
+
+    train/prefill: {"tokens", ["vision_embeds"]}.
+    decode: {"token" (one step), "states" (KV/recurrent state of seq_len),
+             "pos"} — lowered against ``serve_step``.
+    """
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {"tokens": _tok_spec(cfg, shape.global_batch, shape.seq_len)}
+        if cfg.vision_tokens:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.vision_tokens, cfg.d_model), dtype
+            )
+        return specs
+    # decode
+    states = jax.eval_shape(lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len))
+    specs = {
+        "token": _tok_spec(cfg, shape.global_batch, 1),
+        "states": states,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return specs

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based dense dispatch.
+
+TPU/GSPMD-idiomatic MoE (Switch/MaxText style): tokens are dispatched into
+an [E, capacity, D] buffer with one-hot combine weights, experts run as one
+batched einsum over the expert axis (shardable over the "model" mesh axis =
+expert parallelism), results are combined back.  Capacity factor bounds the
+buffer; overflowing tokens are dropped from the MoE path (they keep the
+residual), standard practice for inference-grade routing.
+
+Load-balance auxiliary loss follows Switch Transformer (mean gate fraction
+x mean dispatch fraction x E).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.models.layers import dense_init
+from repro.parallel.sharding import shard_act
+
+
+def moe_init(key, cfg: ArchConfig):
+    m = cfg.moe
+    kr, ku, kg, kd = jax.random.split(key, 4)
+    d, e, f = cfg.d_model, m.n_experts, m.d_expert
+    scale_in = d ** -0.5
+    p = {
+        "router": dense_init(kr, d, e, scale=0.02),
+        "w_up": jax.random.normal(ku, (e, d, f), jnp.float32) * scale_in,
+        "w_down": jax.random.normal(kd, (e, f, d), jnp.float32) * (f ** -0.5),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(kg, (e, d, f), jnp.float32) * scale_in
+    return p
+
+
+MOE_GROUP = 512  # tokens per dispatch group (perf: dispatch cost ~ cf*k*g^2*D)
+
+
+def moe_apply(
+    p,
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    cc: ComputeConfig = EXACT,
+    capacity_factor: float = 1.25,
+    full_capacity: bool = False,
+    group_size: int = MOE_GROUP,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,D], aux load-balance loss scalar).
+
+    **Grouped dispatch** (perf-critical): a single one-hot dispatch einsum
+    over all T tokens costs 2*T*E*C*D with C ~ cf*k*T/E, i.e. O(T^2) — at
+    T = 1M train tokens it dwarfs the expert FLOPs ~500x (measured 0.002
+    useful-compute ratio in the dry-run).  Dispatching within groups of
+    ``g`` tokens cuts it to 2*cf*k*g*T*D: overhead vs expert compute =
+    cf*g/(3*d_expert) — ~28% at g=512, d_expert=768.  Groups follow the
+    batch sharding (G over "data", experts over "model"), so GSPMD lowers
+    the group->expert exchange to the EP all-to-all.
+
+    ``full_capacity=True`` sizes buffers so no token can ever drop
+    (capacity = g) — used on the decode path where T is small and routing
+    must match the prefill pass exactly.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g = min(group_size, t)
+    while t % g:  # groups must tile the token stream exactly
+        g -= 1
+    n_groups = t // g
+    xt = x.reshape(n_groups, g, d)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)  # [G, g, E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)  # [G, g, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # full capacity: every token can land all top_k choices in one expert
+    capacity = g * m.top_k if full_capacity else max(
+        m.top_k, int(capacity_factor * g * m.top_k / m.n_experts)
+    )
+    # position of each (token, k) slot within its expert's per-group buffer
+    onehot = jax.nn.one_hot(expert_idx, m.n_experts, dtype=jnp.int32)  # [G, g, k, E]
+    flat = onehot.reshape(n_groups, g * m.top_k, m.n_experts)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - 1) * flat  # [G, g*k, E]
+    pos = pos_in_expert.max(-1).reshape(n_groups, g, m.top_k)  # [G, g, k]
+    keep = pos < capacity
+
+    # dispatch tensor: one-hot expert x one-hot slot -> [G, g, k, E, C]
+    e_oh = jax.nn.one_hot(expert_idx, m.n_experts, dtype=xt.dtype)
+    c_oh = jax.nn.one_hot(pos, capacity, dtype=xt.dtype)
+    disp = e_oh[..., :, None] * c_oh[..., None, :]
+    disp = disp * keep[..., None, None].astype(xt.dtype)
+    disp_te_c = disp.sum(2)  # [G, g, E, C]
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp_te_c, xt)  # [G, E, C, D]
+    expert_in = shard_act(expert_in, ("batch", "experts", None, None))
+
+    up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(xt.dtype))
+    if "w_gate" in p:
+        gg = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"].astype(xt.dtype))
+        act = jax.nn.silu(gg) if cfg.act == "swiglu" else jax.nn.gelu(gg)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    expert_out = shard_act(
+        jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(xt.dtype)),
+        ("batch", "experts", None, None),
+    )  # [G, E, C, D]
+
+    combine = (gate_vals[..., None, None].astype(xt.dtype) * disp).sum(2)  # [G, g, E, C]
+    out = jnp.einsum("gtec,gecd->gtd", combine, expert_out).reshape(b, s, d)
+
+    # Switch-style load-balance loss
+    me = probs.mean((0, 1))  # [E] mean router prob
+    ce = (onehot.sum(2) > 0).astype(jnp.float32).mean((0, 1))  # [E] dispatch fraction
+    aux = m.n_experts * jnp.sum(me * ce) * cfg.moe.load_balance_coef
+    return out.astype(x.dtype), aux

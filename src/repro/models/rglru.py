@@ -1,0 +1,125 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU + temporal conv).
+
+Block structure (arXiv:2402.19427):
+    x -> linear (d -> 2r): [branch, gate]
+    branch -> causal conv1d(width 4) -> RG-LRU -> * gelu(gate) -> linear (r -> d)
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a y_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x y_t + b_x)          (input gate)
+    a_t = exp(c * softplus(Lambda) * (-r_t))   c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+
+The elementwise recurrence itself is not a dot product — it runs on the
+electronic side under ASTRA (DESIGN.md §Arch-applicability); the
+projections and gates are VDPE-mappable GEMMs.  Sequence path uses the
+``rglru_scan`` kernel (or its lax.scan oracle); decode carries (h, conv
+window) state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.models.layers import dense, dense_init
+from repro.parallel.sharding import shard_act
+
+C_LRU = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # [B, r]
+    conv: jax.Array  # [B, conv_width - 1, r] trailing inputs
+
+
+def rglru_init(key, cfg: ArchConfig):
+    r = cfg.d_rnn
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "w_in": dense_init(k1, cfg.d_model, 2 * r),
+        "conv_w": jax.random.normal(k2, (cfg.conv_width, r), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((r,), jnp.float32),
+        "w_a": dense_init(k3, r, r, bias=True),
+        "w_x": dense_init(k4, r, r, bias=True),
+        # Lambda init so a^c in [0.9, 0.999] at r_t=1 (Griffin init)
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, r)) / C_LRU)),
+        "w_out": dense_init(k5, r, cfg.d_model),
+    }
+
+
+def _gates(p, y: jax.Array, cc: ComputeConfig):
+    """Returns (a, beta_x) with a = decay in (0,1), beta_x = scaled input."""
+    rt = jax.nn.sigmoid(dense(p["w_a"], y, cc).astype(jnp.float32))
+    it = jax.nn.sigmoid(dense(p["w_x"], y, cc).astype(jnp.float32))
+    log_a = -C_LRU * jax.nn.softplus(p["lam"]) * rt  # [B, S, r] (<0)
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, scale * it * y.astype(jnp.float32)
+
+
+def _conv_seq(p, y: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Causal depthwise conv1d over [B, S, r]."""
+    w = p["conv_w"]  # [cw, r]
+    cw = cfg.conv_width
+    pads = jnp.pad(y, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pads[:, i : i + y.shape[1], :] * w[i] for i in range(cw))
+    return out + p["conv_b"]
+
+
+def rglru_seq(
+    p,
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    cc: ComputeConfig = EXACT,
+    use_kernel: bool = False,
+    return_state: bool = False,
+) -> Tuple[jax.Array, RGLRUState | None]:
+    b, s, _ = x.shape
+    r = cfg.d_rnn
+    xz = shard_act(dense(p["w_in"], x, cc), ("batch", None, "rnn"))
+    y, gate = xz[..., :r], xz[..., r:]
+    y = _conv_seq(p, y, cfg)
+    a, bx = _gates(p, y, cc)
+    if use_kernel:
+        from repro.kernels.rglru_scan import rglru_scan
+
+        h = rglru_scan(a, bx)
+    else:
+        from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+        h = rglru_scan_ref(a, bx)
+    out = h.astype(x.dtype) * jax.nn.gelu(gate)
+    out = dense(p["w_out"], out, cc)
+    state = None
+    if return_state:
+        cw = cfg.conv_width
+        # conv buffer holds the last cw-1 *pre-conv* inputs
+        tail = jnp.pad(xz[..., :r], ((0, 0), (max(cw - 1 - s, 0), 0), (0, 0)))[:, -(cw - 1) :]
+        state = RGLRUState(h[:, -1].astype(jnp.float32), tail.astype(jnp.float32))
+    return out, state
+
+
+def rglru_decode(
+    p,
+    x: jax.Array,  # [B, 1, D]
+    state: RGLRUState,
+    cfg: ArchConfig,
+    cc: ComputeConfig = EXACT,
+) -> Tuple[jax.Array, RGLRUState]:
+    r = cfg.d_rnn
+    xz = dense(p["w_in"], x, cc)
+    y_new, gate = xz[..., :r], xz[..., r:]
+    # conv over [state.conv ; y_new]
+    hist = jnp.concatenate([state.conv, y_new.astype(jnp.float32)], axis=1)  # [B, cw, r]
+    w = p["conv_w"]
+    y = jnp.einsum("bcr,cr->br", hist, w)[:, None, :] + p["conv_b"]
+    a, bx = _gates(p, y.astype(x.dtype), cc)
+    h = a[:, 0] * state.h + bx[:, 0]
+    out = h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)
+    out = dense(p["w_out"], out, cc)
+    new_state = RGLRUState(h, hist[:, 1:])
+    return out, new_state

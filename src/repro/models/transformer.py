@@ -1,0 +1,263 @@
+"""The composable decoder stack: pattern units, scan-over-layers, serving state.
+
+A model is ``block_pattern`` repeated ``n_units`` times (stacked params,
+executed under ``lax.scan`` so the HLO stays one-unit-sized regardless of
+depth) plus an unrolled remainder (e.g. RecurrentGemma's 26 = 8x3 + 2).
+Every block kind exposes a sequence path (training / prefill, optionally
+emitting its serving state) and a decode path (one token + state).
+
+Serving state is a pytree mirroring the parameter stacking:
+``{"units": {"slot<i>": stacked_state}, "rem": [state...]}``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    dense, embed_tokens, embedding_init, head_apply, head_init,
+    mlp_apply, mlp_init, norm_apply, norm_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    cc: ComputeConfig = EXACT
+    attn_impl: str = "naive"  # naive | flash (Pallas, interpret on CPU)
+    use_rglru_kernel: bool = False
+    remat: bool = True
+    capacity_factor: float = 1.25
+    z_loss: float = 1e-4
+
+
+# ------------------------------------------------------------------ blocks
+def _has_mlp(cfg: ArchConfig, kind: str) -> bool:
+    return kind in ("attn", "local", "xattn", "rglru") and (cfg.d_ff > 0 or cfg.moe is not None)
+
+
+def block_init(key, cfg: ArchConfig, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"pre_norm": norm_init(cfg.d_model, cfg.norm)}
+    if kind in ("attn", "local", "xattn"):
+        p["core"] = attn.attn_init(k1, cfg, cross=(kind == "xattn"))
+    elif kind == "rglru":
+        p["core"] = rglru_mod.rglru_init(k1, cfg)
+    elif kind == "mlstm":
+        p["core"] = xlstm_mod.mlstm_init(k1, cfg)
+    elif kind == "slstm":
+        p["core"] = xlstm_mod.slstm_init(k1, cfg)
+    if _has_mlp(cfg, kind):
+        p["post_norm"] = norm_init(cfg.d_model, cfg.norm)
+        p["mlp"] = moe_mod.moe_init(k2, cfg) if cfg.moe is not None else mlp_init(k2, cfg)
+    return p
+
+
+def block_apply_seq(
+    p, x, cfg: ArchConfig, kind: str, opts: ModelOptions,
+    vision_embeds=None, return_state: bool = False, max_len: Optional[int] = None,
+):
+    """Returns (x, state, aux)."""
+    cc = opts.cc
+    h = norm_apply(p["pre_norm"], x, cfg.norm, cfg.norm_eps)
+    state = None
+    if kind in ("attn", "local", "xattn"):
+        out, cache = attn.attn_seq(
+            p["core"], h, cfg, kind=kind, cc=cc,
+            use_flash=(opts.attn_impl == "flash"),
+            kv_src=vision_embeds, return_cache=return_state, max_len=max_len,
+        )
+        state = cache
+    elif kind == "rglru":
+        out, state = rglru_mod.rglru_seq(p["core"], h, cfg, cc, opts.use_rglru_kernel, return_state)
+    elif kind == "mlstm":
+        out, state = xlstm_mod.mlstm_seq(p["core"], h, cfg, cc, return_state)
+    elif kind == "slstm":
+        out, state = xlstm_mod.slstm_seq(p["core"], h, cfg, cc, return_state)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if _has_mlp(cfg, kind):
+        h2 = norm_apply(p["post_norm"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe is not None:
+            mo, aux = moe_mod.moe_apply(p["mlp"], h2, cfg, cc, opts.capacity_factor)
+        else:
+            mo = mlp_apply(p["mlp"], h2, cfg, cc)
+        x = x + mo
+    if return_state and state is None:
+        state = jnp.zeros((x.shape[0],), jnp.float32)  # placeholder leaf
+    return x, state, aux
+
+
+def block_apply_decode(p, x, state, pos, cfg: ArchConfig, kind: str, opts: ModelOptions):
+    cc = opts.cc
+    h = norm_apply(p["pre_norm"], x, cfg.norm, cfg.norm_eps)
+    if kind in ("attn", "local", "xattn"):
+        out, state = attn.attn_decode(p["core"], h, state, pos, cfg, kind=kind, cc=cc)
+    elif kind == "rglru":
+        out, state = rglru_mod.rglru_decode(p["core"], h, state, cfg, cc)
+    elif kind == "mlstm":
+        out, state = xlstm_mod.mlstm_decode(p["core"], h, state, cfg, cc)
+    elif kind == "slstm":
+        out, state = xlstm_mod.slstm_decode(p["core"], h, state, cfg, cc)
+    x = x + out
+    if _has_mlp(cfg, kind):
+        h2 = norm_apply(p["post_norm"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe is not None:
+            mo, _ = moe_mod.moe_apply(p["mlp"], h2, cfg, cc, full_capacity=True)
+        else:
+            mo = mlp_apply(p["mlp"], h2, cfg, cc)
+        x = x + mo
+    return x, state
+
+
+def block_state_init(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "local", "xattn"):
+        return attn.init_cache(cfg, kind, batch, max_len)
+    if kind == "rglru":
+        return rglru_mod.RGLRUState(
+            jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), jnp.float32),
+        )
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.slstm_state_init(cfg, batch)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------ stack
+def init_params(key, cfg: ArchConfig):
+    keys = jax.random.split(key, 4)
+    pattern = cfg.block_pattern
+    n_units = cfg.n_pattern_units
+    params: Dict[str, Any] = {
+        "embedding": embedding_init(keys[0], cfg),
+        "head": head_init(keys[1], cfg),
+        "final_norm": norm_init(cfg.d_model, cfg.norm),
+    }
+    if n_units:
+        unit_keys = jax.random.split(keys[2], n_units)
+        units = {}
+        for si, kind in enumerate(pattern):
+            slot_keys = jax.vmap(lambda k, i=si: jax.random.fold_in(k, i))(unit_keys)
+            units[f"slot{si}"] = jax.vmap(lambda k, kk=kind: block_init(k, cfg, kk))(slot_keys)
+        params["units"] = units
+    rem_kinds = cfg.layer_kinds[n_units * len(pattern):]
+    if rem_kinds:
+        rkeys = jax.random.split(keys[3], len(rem_kinds))
+        params["rem"] = [block_init(rkeys[i], cfg, k) for i, k in enumerate(rem_kinds)]
+    return params
+
+
+def _unit_seq(cfg, opts, vision_embeds, return_state, max_len=None):
+    pattern = cfg.block_pattern
+
+    def fn(x, unit_params):
+        states = {}
+        aux = jnp.zeros((), jnp.float32)
+        for si, kind in enumerate(pattern):
+            x, st, a = block_apply_seq(
+                unit_params[f"slot{si}"], x, cfg, kind, opts,
+                vision_embeds=vision_embeds, return_state=return_state, max_len=max_len,
+            )
+            aux += a
+            if return_state:
+                states[f"slot{si}"] = st
+        return x, (states, aux) if return_state else aux
+
+    return fn
+
+
+def forward(
+    params, tokens, cfg: ArchConfig, opts: ModelOptions,
+    vision_embeds=None, return_states: bool = False, max_len: Optional[int] = None,
+):
+    """Full-sequence pass.  Returns (logits, aux, states|None)."""
+    from repro.parallel.sharding import shard_act
+
+    x = shard_act(embed_tokens(params["embedding"], tokens, cfg), ("batch", None, None))
+    aux_total = jnp.zeros((), jnp.float32)
+    states: Dict[str, Any] = {}
+    if "units" in params:
+        fn = _unit_seq(cfg, opts, vision_embeds, return_states, max_len)
+        if opts.remat:
+            fn = jax.checkpoint(fn)
+        x, ys = jax.lax.scan(fn, x, params["units"])
+        if return_states:
+            states["units"], aux_seq = ys
+            aux_total += aux_seq.sum()
+        else:
+            aux_total += ys.sum()
+    if "rem" in params:
+        rem_kinds = cfg.layer_kinds[cfg.n_pattern_units * len(cfg.block_pattern):]
+        rem_states = []
+        for p_i, kind in zip(params["rem"], rem_kinds):
+            x, st, a = block_apply_seq(
+                p_i, x, cfg, kind, opts, vision_embeds=vision_embeds,
+                return_state=return_states, max_len=max_len,
+            )
+            aux_total += a
+            rem_states.append(st)
+        if return_states:
+            states["rem"] = rem_states
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = head_apply(params["head"], params["embedding"], x, cfg, opts.cc)
+    return logits, aux_total, (states if return_states else None)
+
+
+def decode_step(params, token, states, pos, cfg: ArchConfig, opts: ModelOptions):
+    """One serving step.  token [B,1] (or [B,C,1] multi-codebook) -> logits."""
+    x = embed_tokens(params["embedding"], token, cfg)
+    if "units" in params:
+        pattern = cfg.block_pattern
+
+        def fn(x, xs):
+            unit_params, unit_states = xs
+            new_states = {}
+            for si, kind in enumerate(pattern):
+                x, st = block_apply_decode(
+                    unit_params[f"slot{si}"], x, unit_states[f"slot{si}"], pos, cfg, kind, opts
+                )
+                new_states[f"slot{si}"] = st
+            return x, new_states
+
+        x, new_unit_states = jax.lax.scan(fn, x, (params["units"], states["units"]))
+        states = dict(states)
+        states["units"] = new_unit_states
+    if "rem" in params:
+        rem_kinds = cfg.layer_kinds[cfg.n_pattern_units * len(cfg.block_pattern):]
+        new_rem = []
+        for p_i, st, kind in zip(params["rem"], states["rem"], rem_kinds):
+            x, st2 = block_apply_decode(p_i, x, st, pos, cfg, kind, opts)
+            new_rem.append(st2)
+        states = dict(states)
+        states["rem"] = new_rem
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = head_apply(params["head"], params["embedding"], x, cfg, opts.cc)
+    return logits, states
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int):
+    """Zeroed serving state (the dry-run's decode input spec)."""
+    pattern = cfg.block_pattern
+    n_units = cfg.n_pattern_units
+    states: Dict[str, Any] = {}
+    if n_units:
+        units = {}
+        for si, kind in enumerate(pattern):
+            one = block_state_init(cfg, kind, batch, max_len)
+            units[f"slot{si}"] = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_units, *a.shape)), one)
+        states["units"] = units
+    rem_kinds = cfg.layer_kinds[n_units * len(pattern):]
+    if rem_kinds:
+        states["rem"] = [block_state_init(cfg, k, batch, max_len) for k in rem_kinds]
+    return states

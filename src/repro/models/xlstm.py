@@ -1,0 +1,229 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM (arXiv:2405.04517): covariance-style matrix state with exponential
+input gate and forget gate.  Two mathematically equivalent forms:
+
+* sequence path — the *quadratic* decay-masked linear-attention form:
+      D[t,s] = b_t - b_s + li_s  (s <= t, else -inf),  b = cumsum(logsigmoid(f))
+      m_t = max_s D[t,s]
+      h_t = sum_s exp(D[t,s] - m_t) (q_t . k_s) v_s
+            / max(|sum_s exp(D[t,s] - m_t) (q_t . k_s)|, exp(-m_t))
+  (identical to the stabilized recurrence because the running max
+  m_t = max(lf_t + m_{t-1}, li_t) telescopes to the row max of D).
+* decode path — the stabilized recurrence over (C~, n~, m) carried in the
+  serving state; O(1) per token, bounded memory (the reason this arch runs
+  the ``long_500k`` shape).
+
+sLSTM: scalar memory with recurrent (per-head block-diagonal) connections —
+inherently sequential; implemented as a lax.scan over time.  Under ASTRA
+its recurrent part stays electronic (DESIGN.md §Arch-applicability).
+
+Block layouts follow the paper: mLSTM is a pre-up-projection block (2x
+expansion, gated); sLSTM is post-up-projection (4/3 GLU FFN after the cell).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.models.layers import dense, dense_init, norm_apply, norm_init
+from repro.parallel.sharding import shard_act
+
+
+# ===================================================================== mLSTM
+class MLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, dk, dv] stabilized matrix memory
+    n: jax.Array  # [B, H, dk]
+    m: jax.Array  # [B, H] running log max
+
+
+def mlstm_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    e = 2 * d
+    h = cfg.n_heads
+    dh = e // h
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * e),  # [x | gate]
+        "w_q": dense_init(ks[1], e, e),
+        "w_k": dense_init(ks[2], e, e),
+        "w_v": dense_init(ks[3], e, e),
+        "w_if": dense_init(ks[4], e, 2 * h),  # input+forget gate per head
+        "out_norm": norm_init(e, "rmsnorm"),
+        "w_down": dense_init(ks[5], e, d),
+    }
+
+
+def _mlstm_qkvif(p, xe: jax.Array, cfg: ArchConfig, cc: ComputeConfig):
+    b, s, e = xe.shape
+    h = cfg.n_heads
+    dh = e // h
+    q = dense(p["w_q"], xe, cc).reshape(b, s, h, dh).transpose(0, 2, 1, 3) * (dh ** -0.5)
+    k = dense(p["w_k"], xe, cc).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = dense(p["w_v"], xe, cc).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    gif = dense(p["w_if"], xe, cc).astype(jnp.float32).reshape(b, s, 2, h)
+    li = gif[:, :, 0].transpose(0, 2, 1)  # [B, H, S] log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(gif[:, :, 1]).transpose(0, 2, 1)  # [B, H, S]
+    return q, k, v, li, lf
+
+
+def mlstm_seq(
+    p, x: jax.Array, cfg: ArchConfig, cc: ComputeConfig = EXACT, return_state: bool = False
+) -> Tuple[jax.Array, MLSTMState | None]:
+    b, s, d = x.shape
+    e = 2 * d
+    up = shard_act(dense(p["w_up"], x, cc), ("batch", None, "ffn"))
+    xe, gate = up[..., :e], up[..., e:]
+    q, k, v, li, lf = _mlstm_qkvif(p, xe, cfg, cc)
+    bcum = jnp.cumsum(lf, axis=-1)  # [B, H, S]
+    dmat = bcum[..., :, None] - bcum[..., None, :] + li[..., None, :]  # [B,H,S,S]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(mask, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1)  # [B, H, S]
+    w = jnp.exp(dmat - m[..., None])  # [B,H,S,S]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32))
+    ws = w * scores
+    num = jnp.einsum("bhts,bhsd->bhtd", ws, v.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(ws.sum(-1)), jnp.exp(-m))  # [B,H,S]
+    hseq = (num / den[..., None]).astype(x.dtype)  # [B,H,S,dh]
+    hmerged = hseq.transpose(0, 2, 1, 3).reshape(b, s, e)
+    hmerged = norm_apply(p["out_norm"], hmerged, "rmsnorm", cfg.norm_eps)
+    out = dense(p["w_down"], hmerged * jax.nn.silu(gate), cc)
+    state = None
+    if return_state:
+        # fold the whole sequence into the recurrent state for serving
+        state = _mlstm_fold_state(q, k, v, li, lf, bcum)
+    return out, state
+
+
+def _mlstm_fold_state(q, k, v, li, lf, bcum) -> MLSTMState:
+    bsz, h, s, dh = k.shape
+    btot = bcum[..., -1]  # [B, H]
+    dvec = btot[..., None] - bcum + li  # weight of each s in final state
+    m_s = jnp.max(dvec, axis=-1)  # [B, H]
+    wv = jnp.exp(dvec - m_s[..., None])
+    c = jnp.einsum("bhs,bhsd,bhse->bhde", wv, k.astype(jnp.float32), v.astype(jnp.float32))
+    n = jnp.einsum("bhs,bhsd->bhd", wv, k.astype(jnp.float32))
+    return MLSTMState(c, n, m_s)
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int) -> MLSTMState:
+    e = 2 * cfg.d_model
+    h = cfg.n_heads
+    dh = e // h
+    return MLSTMState(
+        jnp.zeros((batch, h, dh, dh), jnp.float32),
+        jnp.zeros((batch, h, dh), jnp.float32),
+        jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def mlstm_decode(
+    p, x: jax.Array, state: MLSTMState, cfg: ArchConfig, cc: ComputeConfig = EXACT
+) -> Tuple[jax.Array, MLSTMState]:
+    b, one, d = x.shape
+    e = 2 * d
+    up = dense(p["w_up"], x, cc)
+    xe, gate = up[..., :e], up[..., e:]
+    q, k, v, li, lf = _mlstm_qkvif(p, xe, cfg, cc)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]  # [B, H, dh]
+    li, lf = li[..., 0], lf[..., 0]  # [B, H]
+    m_new = jnp.maximum(lf + state.m, li)
+    alpha = jnp.exp(lf + state.m - m_new)[..., None]
+    beta = jnp.exp(li - m_new)[..., None]
+    c = alpha[..., None] * state.c + beta[..., None] * (
+        k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    n = alpha * state.n + beta * k.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhd->bhe", c, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q.astype(jnp.float32))), jnp.exp(-m_new))
+    hvec = (num / den[..., None]).reshape(b, 1, e).astype(x.dtype)
+    hvec = norm_apply(p["out_norm"], hvec, "rmsnorm", cfg.norm_eps)
+    out = dense(p["w_down"], hvec * jax.nn.silu(gate), cc)
+    return out, MLSTMState(c, n, m_new)
+
+
+# ===================================================================== sLSTM
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, dh]
+    n: jax.Array  # [B, H, dh]
+    m: jax.Array  # [B, H, dh]
+    h: jax.Array  # [B, H, dh]
+
+
+def slstm_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    f_up = int(d * 4 / 3)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, bias=True),  # i f z o
+        "r_gates": jax.random.normal(ks[1], (4, h, dh, dh), jnp.float32) / math.sqrt(dh),
+        "out_norm": norm_init(d, "rmsnorm"),
+        "w_up": dense_init(ks[2], d, 2 * f_up),
+        "w_down": dense_init(ks[3], f_up, d),
+    }
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int) -> SLSTMState:
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return SLSTMState(z, z, jnp.full_like(z, -1e30), z)
+
+
+def _slstm_cell(p, wx_t: jax.Array, state: SLSTMState) -> Tuple[SLSTMState, jax.Array]:
+    """wx_t: [B, 4, H, dh] pre-computed input contribution at step t."""
+    rh = jnp.einsum("ghde,bhd->gbhe", p["r_gates"], state.h)  # [4, B, H, dh]
+    pre = wx_t.transpose(1, 0, 2, 3) + rh  # [4, B, H, dh]
+    i_raw, f_raw, z_raw, o_raw = pre[0], pre[1], pre[2], pre[3]
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + state.m, i_raw)
+    alpha = jnp.exp(lf + state.m - m_new)
+    beta = jnp.exp(i_raw - m_new)
+    c = alpha * state.c + beta * jnp.tanh(z_raw)
+    n = alpha * state.n + beta
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-9)
+    return SLSTMState(c, n, m_new, h), h
+
+
+def slstm_seq(
+    p, x: jax.Array, cfg: ArchConfig, cc: ComputeConfig = EXACT, return_state: bool = False
+) -> Tuple[jax.Array, SLSTMState | None]:
+    b, s, d = x.shape
+    hh, dh = cfg.n_heads, d // cfg.n_heads
+    wx = dense(p["w_gates"], x, cc).astype(jnp.float32).reshape(b, s, 4, hh, dh)
+    state0 = slstm_state_init(cfg, b)
+
+    def step(st, wx_t):
+        st2, h = _slstm_cell(p, wx_t, st)
+        return st2, h
+
+    state, hs = jax.lax.scan(step, state0, jnp.moveaxis(wx, 1, 0))
+    hseq = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    hseq = norm_apply(p["out_norm"], hseq, "rmsnorm", cfg.norm_eps)
+    up = dense(p["w_up"], hseq, cc)
+    f = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :f]) * up[..., f:]
+    out = dense(p["w_down"], y, cc)
+    return out, (state if return_state else None)
+
+
+def slstm_decode(
+    p, x: jax.Array, state: SLSTMState, cfg: ArchConfig, cc: ComputeConfig = EXACT
+) -> Tuple[jax.Array, SLSTMState]:
+    b, one, d = x.shape
+    hh, dh = cfg.n_heads, d // cfg.n_heads
+    wx = dense(p["w_gates"], x, cc).astype(jnp.float32).reshape(b, 4, hh, dh)
+    state2, h = _slstm_cell(p, wx, state)
+    hseq = h.reshape(b, 1, d).astype(x.dtype)
+    hseq = norm_apply(p["out_norm"], hseq, "rmsnorm", cfg.norm_eps)
+    up = dense(p["w_up"], hseq, cc)
+    f = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :f]) * up[..., f:]
+    return dense(p["w_down"], y, cc), state2

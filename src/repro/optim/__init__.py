@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_compress import CompressorState, compress_init, compressed_psum
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "CompressorState", "compress_init", "compressed_psum",
+]

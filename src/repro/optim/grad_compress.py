@@ -1,0 +1,50 @@
+"""Error-feedback int8 gradient compression for the pod-crossing all-reduce.
+
+At multi-pod scale the DP all-reduce over the ``pod`` axis rides the slow
+inter-pod links (DCN), so we compress: per-leaf symmetric int8 quantization
+with an error-feedback residual (Seide et al. / EF-SGD) so compression bias
+vanishes over steps.  Used inside a shard_map over the pod axis; within-pod
+reduction stays full precision.
+
+``compressed_psum(g, axis, state)``: quantize(g + residual) -> int8 psum ->
+dequantize; new residual = (g + residual) - dequantized_local.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressorState(NamedTuple):
+    residual: Any  # pytree matching grads
+
+
+def compress_init(grads) -> CompressorState:
+    return CompressorState(jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+def compressed_psum(grads, axis_name: str, state: CompressorState) -> Tuple[Any, CompressorState]:
+    """int8-compressed psum over ``axis_name`` with error feedback."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        # shared quantization scale: pmax of the local absmax (a scalar
+        # collective, negligible next to the int8 payload) — every member
+        # quantizes AND dequantizes on the same grid, so the int8 psum is
+        # exact up to per-member rounding.
+        amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        n = jax.lax.psum(1, axis_name)
+        q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        deq = q_sum.astype(jnp.float32) * scale / n
+        local_deq = q.astype(jnp.float32) * scale
+        new_r = gf - local_deq
+        return deq.astype(g.dtype), new_r
+
+    out = jax.tree.map(one, grads, state.residual)
+    g2 = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    r2 = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return g2, CompressorState(r2)

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (
+    batch_specs, param_specs, state_specs, logical_rules, tree_shardings,
+)
+
+__all__ = ["batch_specs", "param_specs", "state_specs", "logical_rules", "tree_shardings"]

@@ -1,0 +1,348 @@
+"""Logical-axis sharding rules -> NamedSharding for every pytree we jit.
+
+One rule table serves all ten architectures (DP / FSDP / TP / EP / SP):
+
+* batch            -> ("pod", "data")     pure DP across pods (only gradient
+                                          all-reduce crosses the DCN)
+* GEMM input dim   -> "data"              FSDP / ZeRO-3 parameter+optimizer
+                                          sharding; GSPMD inserts the
+                                          all-gathers next to use sites
+* GEMM output dim  / heads / vocab -> "model"   tensor parallelism
+* MoE expert dim   -> "model"             expert parallelism (EP == TP axis;
+                                          experts are small, one group per
+                                          shard)
+* KV-cache batch   -> ("pod", "data"), heads -> "model"
+* recurrent state width -> "model"        SP-style state sharding for
+                                          SSM/hybrid decode
+
+Every assignment is guarded by divisibility: if a mesh axis does not divide
+the dim (e.g. kv=8 heads on a 16-way model axis), the dim is replicated —
+GSPMD keeps the program correct either way; the dry-run report shows the
+consequence.  Rules are resolved per parameter *path*, so stacked scan
+units (leading U dim) and multi-codebook tables (leading C dim) just get
+leading ``None``s.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# trailing-dims logical rules per leaf name (regex on the flattened path).
+# Convention: ("in", "out") GEMMs are (FSDP, TP).
+_PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"embedding/table$", ("model", "data")),          # (V, D): vocab TP + FSDP
+    (r"head/w$", ("data", "model")),                   # (D, V)
+    (r"(wq|wk|wv)/w$", ("data", "model")),
+    (r"(wq|wk|wv)/b$", ("model",)),
+    (r"wo/w$", ("model", "data")),
+    (r"(up|gate)/w$", ("data", "model")),
+    (r"down/w$", ("model", "data")),
+    (r"(up|gate|down|wo)/b$", (None,)),
+    (r"router/w$", ("data", None)),
+    (r"mlp/(w_up|w_gate)$", ("model", "data", None)),  # (E, D, F): EP + FSDP
+    (r"mlp/w_down$", ("model", None, "data")),         # (E, F, D)
+    (r"w_in/w$", ("data", "model")),
+    (r"w_out/w$", ("model", "data")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"lam$", ("model",)),
+    (r"(w_a|w_x)/w$", (None, "model")),
+    (r"(w_a|w_x)/b$", ("model",)),
+    (r"(w_up|w_gates|w_q|w_k|w_v|w_if)/w$", ("data", "model")),
+    (r"(w_up|w_gates|w_q|w_k|w_v|w_if)/b$", ("model",)),
+    (r"w_down/w$", ("model", "data")),
+    (r"r_gates$", (None, None, None, None)),
+    (r"(scale|bias)$", (None,)),
+)
+
+
+def logical_rules() -> Tuple[Tuple[str, Tuple], ...]:
+    return _PARAM_RULES
+
+
+# ------------------------------------------------------------- strategies
+# Named parallelism strategies re-map the baseline (TP+FSDP) rule table:
+#
+# * "tp_fsdp" — baseline: GEMM input dim FSDP over "data", output dim TP
+#   over "model" (megatron-style row/col parallel + ZeRO).
+# * "fsdp"    — pure ZeRO-3: no tensor parallelism; every sharded param dim
+#   spreads over the flattened ("data","model") axes and the batch does
+#   too.  Kills the per-layer row-parallel activation all-reduces at the
+#   cost of per-layer weight all-gathers — a large win when activations
+#   outweigh weights (see EXPERIMENTS.md SPerf, qwen1.5-110b/train_4k).
+# * "ep_dp"   — for MoE archs with small d_model: experts stay on "model"
+#   (EP), everything else is DP/FSDP over "data" only (attention weights
+#   are tiny; TP-ing them costs an all-reduce of the full activation per
+#   layer).
+STRATEGIES = ("tp_fsdp", "fsdp", "ep_dp", "tp")
+
+
+def _remap_rule(rule: Tuple, strategy: str, is_expert: bool) -> Tuple:
+    if strategy == "tp_fsdp":
+        return rule
+    if strategy == "fsdp" and is_expert:
+        # experts keep their EP layout (E on "model", D FSDP on "data"):
+        # token-side fsdp sharding + per-layer expert-weight gathers
+        return rule
+    out = []
+    for entry in rule:
+        if strategy == "fsdp":
+            if entry == "data":
+                out.append(("data", "model"))
+            elif entry == "model":
+                out.append(None)
+            else:
+                out.append(entry)
+        elif strategy == "ep_dp":
+            if is_expert:
+                out.append(entry)  # experts keep EP over "model"
+            elif entry == "model":
+                out.append(None)
+            else:
+                out.append(entry)
+        elif strategy == "tp":
+            # inference: no optimizer state to shard -> drop FSDP, keep TP
+            out.append(None if entry == "data" else entry)
+    # at most one dim may use the combined axes; keep the first
+    if strategy == "fsdp":
+        seen = False
+        for i, e in enumerate(out):
+            if e == ("data", "model"):
+                if seen:
+                    out[i] = None
+                seen = True
+    return tuple(out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return mesh.shape[entry]
+
+
+def _guard(mesh: Mesh, spec: Tuple, shape: Tuple[int, ...]) -> P:
+    """Drop axes that don't divide the dim; pad missing leading dims."""
+    spec = tuple(spec)
+    if len(spec) < len(shape):
+        spec = (None,) * (len(shape) - len(spec)) + spec
+    spec = spec[-len(shape):] if len(spec) > len(shape) else spec
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(shapes_tree, mesh: Mesh, strategy: str = "tp_fsdp"):
+    """ShapeDtypeStruct tree -> NamedSharding tree via the rule table."""
+    assert strategy in STRATEGIES, strategy
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        for pat, rule in _PARAM_RULES:
+            if re.search(pat, pstr):
+                is_expert = bool(re.search(r"mlp/(w_up|w_gate|w_down)$", pstr))
+                rule = _remap_rule(rule, strategy, is_expert)
+                return NamedSharding(mesh, _guard(mesh, rule, leaf.shape))
+        return NamedSharding(mesh, P())  # replicate by default
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+def _dp_axes(mesh: Mesh, batch: int, strategy: str = "tp_fsdp"):
+    """Largest batch-dividing contiguous run of the DP axes."""
+    names = ("pod", "data", "model") if strategy == "fsdp" else ("pod", "data")
+    cand = [a for a in names if a in mesh.shape]
+    options = []
+    for i in range(len(cand)):
+        options.append(tuple(cand[i:]))  # drop outermost axes first
+    options += [tuple(cand[:-1])] if len(cand) > 1 else []
+    for axes in options:
+        if axes and batch % _axis_size(mesh, axes) == 0:
+            return axes
+    return None
+
+
+def batch_specs(specs_tree, mesh: Mesh, strategy: str = "tp_fsdp"):
+    """Input batch tree: shard dim 0 (global batch) over the DP axes."""
+
+    def one(path, leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        dp = _dp_axes(mesh, leaf.shape[0], strategy)
+        spec = [None] * len(leaf.shape)
+        if dp:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, specs_tree)
+
+
+# state field rules: (field, base_rank) -> trailing rule
+def _state_rule(pstr: str, base_rank: int, kv_layout: str = "heads") -> Tuple:
+    if re.search(r"\.(k|v)$", pstr) or pstr.endswith("/k") or pstr.endswith("/v"):
+        if kv_layout == "seq":
+            # flash-decoding layout: shard the sequence axis of the cache
+            # over "model" — kv-head counts that don't divide the axis stop
+            # mattering, the per-chip cache shrinks 16x, and the softmax
+            # reduction over the sharded axis costs only tiny [B,H] partial
+            # all-reduces (see EXPERIMENTS.md SPerf, qwen2.5-32b/decode_32k)
+            return ("batch", None, "model", None)  # [B, kv, S, hd]
+        return ("batch", "model", None, None)  # [B, kv, S, hd]
+    if pstr.endswith("h") and base_rank == 2:
+        return ("batch", "model")  # rglru h [B, R]
+    if pstr.endswith("conv"):
+        return ("batch", None, "model")
+    if base_rank == 4:  # mlstm c [B, H, dk, dv]
+        return ("batch", None, "model", None)
+    if base_rank == 3:  # mlstm n / slstm fields [B, H, d]
+        return ("batch", None, "model")
+    if base_rank == 2:  # mlstm m [B, H]
+        return ("batch", None)
+    return ("batch",)
+
+
+def state_specs(states_tree, mesh: Mesh, batch: int, in_units_rank_bump: bool = True,
+                kv_layout: str = "heads"):
+    """Decode-state tree -> shardings (KV caches, recurrent states)."""
+    dp = _dp_axes(mesh, batch)
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        rank = len(leaf.shape)
+        base_rank = rank - 1 if "units" in pstr else rank
+        rule = _state_rule(pstr, base_rank, kv_layout)
+        # replace the symbolic "batch" with the dp axes
+        rule = tuple(dp if r == "batch" else r for r in rule)
+        return NamedSharding(mesh, _guard(mesh, rule, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, states_tree)
+
+
+# ------------------------------------------------------- activation hints
+# Explicit with_sharding_constraint hints at key activation sites keep GSPMD
+# on the megatron-style layout (batch over DP axes, heads/ffn/experts over
+# "model") instead of replicating activations inside the layer scan.
+_ACT_RULES = {
+    "tp_fsdp": {
+        "batch": ("pod", "data"),
+        "moe_batch": ("pod", "data"),
+        "heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "vocab": "model",
+        "rnn": "model",
+        "embed": None,
+        "seq": None,
+    },
+    # pure ZeRO-3: batch spreads over every axis; no TP'd activation dims
+    "fsdp": {
+        "batch": ("pod", "data", "model"),
+        "moe_batch": ("pod", "data"),
+        "heads": None, "ffn": None, "experts": None, "vocab": None,
+        "rnn": None, "embed": None, "seq": None,
+    },
+    # inference TP: same activation layout as tp_fsdp
+    "tp": {
+        "batch": ("pod", "data"),
+        "moe_batch": ("pod", "data"),
+        "heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "vocab": "model",
+        "rnn": "model",
+        "embed": None,
+        "seq": None,
+    },
+    # MoE EP without TP: only the expert axis uses "model"
+    "ep_dp": {
+        "batch": ("pod", "data"),
+        "moe_batch": ("pod", "data"),
+        "heads": None, "ffn": None, "experts": "model", "vocab": None,
+        "rnn": None, "embed": None, "seq": None,
+    },
+}
+
+_MESH_VAR: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_act_mesh", default=None
+)
+_STRAT_VAR: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_act_strategy", default="tp_fsdp"
+)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh], strategy: str = "tp_fsdp"):
+    """Enable activation sharding hints for model code built in this scope."""
+    tok = _MESH_VAR.set(mesh)
+    tok2 = _STRAT_VAR.set(strategy)
+    try:
+        yield
+    finally:
+        _MESH_VAR.reset(tok)
+        _STRAT_VAR.reset(tok2)
+
+
+def shard_act(x: jax.Array, logical: Tuple[Optional[str], ...]) -> jax.Array:
+    """Apply a logical activation constraint (no-op outside activation_mesh)."""
+    mesh = _MESH_VAR.get()
+    if mesh is None:
+        return x
+    rules = _ACT_RULES[_STRAT_VAR.get()]
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        axes = rules.get(name) if name else None
+        if axes is None:
+            spec.append(None)
+            continue
+        if isinstance(axes, tuple):
+            axes = tuple(a for a in axes if a in mesh.shape)
+            # longest dividing suffix: e.g. batch 256 on ("pod","data","model")
+            # = 512 falls back to ("data","model") = 256 instead of
+            # replicating (a silent full-replication footgun on 3-axis meshes)
+            while axes and dim % _axis_size(mesh, axes) != 0:
+                axes = axes[1:]
+            spec.append(axes if axes else None)
+            continue
+        elif axes not in mesh.shape:
+            spec.append(None)
+            continue
+        spec.append(axes if dim % _axis_size(mesh, axes) == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def tree_shardings(tree, mesh: Mesh, kind: str, batch: Optional[int] = None):
+    if kind == "params":
+        return param_specs(tree, mesh)
+    if kind == "batch":
+        return batch_specs(tree, mesh)
+    if kind == "state":
+        assert batch is not None
+        return state_specs(tree, mesh, batch)
+    raise ValueError(kind)

@@ -1,0 +1,4 @@
+from repro.runtime.fault import FaultInjector, SimulatedFault, run_with_restarts
+from repro.runtime.elastic import elastic_restore
+
+__all__ = ["FaultInjector", "SimulatedFault", "run_with_restarts", "elastic_restore"]

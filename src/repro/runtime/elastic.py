@@ -1,0 +1,39 @@
+"""Elastic scaling: resume a checkpoint on a different mesh.
+
+Checkpoints store full logical arrays (``repro.checkpoint``), so scaling is
+re-*sharding*, not re-*assembly*: build the new mesh, resolve the sharding
+rule table against it, and device_put every leaf.  The train step is then
+re-jitted for the new topology — GSPMD emits the new collective schedule
+automatically.  What the launcher must get right (and what this module +
+tests pin down):
+
+* param/optimizer leaves keep their logical shapes — any (data, model)
+  re-factorization is legal;
+* the *global batch* is preserved by default so optimization dynamics don't
+  change when pods come/go (per-device batch grows); pass a new
+  ``global_batch`` explicitly to trade that off;
+* data order stays aligned because the pipeline is step-addressable.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+from repro.checkpoint import CheckpointManager
+from repro.parallel.sharding import param_specs
+
+
+def elastic_restore(
+    ckpt_manager: CheckpointManager,
+    step: int,
+    template: Any,
+    new_mesh,
+    spec_fn=param_specs,
+) -> Tuple[Any, dict]:
+    """Restore checkpoint ``step`` re-sharded for ``new_mesh``.
+
+    ``template``: pytree of arrays/ShapeDtypeStructs defining the structure.
+    ``spec_fn(template, mesh)`` resolves the sharding tree (defaults to the
+    parameter rule table; pass a custom fn for full train states).
+    """
+    shardings = spec_fn(template, new_mesh)
+    return ckpt_manager.restore(step, template, shardings=shardings)

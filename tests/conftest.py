@@ -1,0 +1,26 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the 1 real CPU
+device; only launch/dryrun.py (a separate process) forces 512 placeholders."""
+import os
+import sys
+
+# make `import repro` work without installation when run as `pytest tests/`
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _jax_x64_off():
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,68 @@
+"""B-to-S converter properties: every generator must emit EXACTLY m ones."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitstream import (
+    LFSR_ORDER, N_WORDS, STREAM_LEN, encode, encode_signed, pack_bits,
+    popcount, stream_bits, unpack_bits,
+)
+
+GENERATORS = ("thermometer", "bresenham", "lfsr")
+
+
+@pytest.mark.parametrize("gen", GENERATORS)
+def test_exact_density_all_magnitudes(gen):
+    mags = jnp.arange(0, 128)
+    bits = stream_bits(mags, gen)  # [128, 128]
+    counts = np.asarray(bits.sum(-1))
+    np.testing.assert_array_equal(counts, np.arange(128))
+
+
+@pytest.mark.parametrize("gen", GENERATORS)
+@pytest.mark.parametrize("phase", [0, 1, 17, 127])
+def test_phase_preserves_density(gen, phase):
+    mags = jnp.asarray([0, 1, 63, 64, 127])
+    counts = np.asarray(stream_bits(mags, gen, phase).sum(-1))
+    np.testing.assert_array_equal(counts, [0, 1, 63, 64, 127])
+
+
+def test_lfsr_order_is_permutation():
+    assert sorted(LFSR_ORDER) == list(range(128))
+
+
+def test_pack_unpack_roundtrip(rng):
+    bits = jnp.asarray(rng.integers(0, 2, (5, 7, STREAM_LEN)), jnp.int32)
+    packed = pack_bits(bits)
+    assert packed.shape == (5, 7, N_WORDS) and packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(unpack_bits(packed)), np.asarray(bits))
+
+
+def test_popcount_matches_bitsum(rng):
+    bits = jnp.asarray(rng.integers(0, 2, (9, STREAM_LEN)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(popcount(pack_bits(bits))), np.asarray(bits.sum(-1))
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(-127, 127), st.sampled_from(GENERATORS))
+def test_property_encode_signed(q, gen):
+    packed, sign = encode_signed(jnp.asarray([q], jnp.int8), gen)
+    assert int(sign[0]) == (-1 if q < 0 else 1)
+    assert int(popcount(packed)[0]) == abs(q)
+
+
+def test_thermometer_is_prefix():
+    bits = np.asarray(stream_bits(jnp.asarray([37]), "thermometer"))[0]
+    assert bits[:37].all() and not bits[37:].any()
+
+
+def test_bresenham_spacing_is_even():
+    # m ones in 128 slots: max gap between ones <= ceil(128/m) + 1
+    for m in (3, 17, 64, 100):
+        bits = np.asarray(stream_bits(jnp.asarray([m]), "bresenham"))[0]
+        pos = np.flatnonzero(bits)
+        gaps = np.diff(pos)
+        assert gaps.max() <= int(np.ceil(128 / m)) + 1

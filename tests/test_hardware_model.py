@@ -1,0 +1,123 @@
+"""Hardware model: mapping, energy, simulator, baselines — the paper's
+quantitative claims as assertions.
+"""
+import pytest
+
+from repro.configs import PAPER_MODELS, PAPER_SEQ_LEN, get_arch
+from repro.core.baselines import BASELINES, compare_all, simulate_baseline
+from repro.core.energy import AstraChipConfig
+from repro.core.mapping import MatmulOp, map_matmul
+from repro.core.photonics import PhotonicParams, laser_power_w, vdpe_scalability_table
+from repro.core.simulator import model_ops, simulate
+
+CHIP = AstraChipConfig()
+
+
+# ---------------------------------------------------------------- mapping
+def test_map_matmul_latency_scales_with_work():
+    small = map_matmul(CHIP, MatmulOp("s", 64, 512, 64))
+    big = map_matmul(CHIP, MatmulOp("b", 128, 512, 128))
+    assert big.latency_s >= small.latency_s * 3.5  # 4x outputs
+
+
+def test_output_stationary_single_adc_per_output():
+    op = MatmulOp("x", 32, 4096, 16)  # K=4096 -> 4 passes per output
+    cost = map_matmul(CHIP, op)
+    assert cost.adc_convs == 32 * 16  # one conversion per output, not per pass
+    assert cost.passes == 32 * 16 * 4
+
+
+def test_dynamic_operands_cost_no_extra_latency():
+    """ASTRA streams both operands — a dynamic-weight GEMM (QK^T) maps at
+    the same latency as a static-weight GEMM of equal size."""
+    stat = map_matmul(CHIP, MatmulOp("w", 64, 1024, 64, dynamic_w=False))
+    dyn = map_matmul(CHIP, MatmulOp("d", 64, 1024, 64, dynamic_w=True))
+    assert dyn.latency_s == stat.latency_s
+    # and strictly less HBM energy (no weight fetch)
+    assert dyn.energy_j.get("hbm", 0.0) <= stat.energy_j.get("hbm", 0.0)
+
+
+# ------------------------------------------------------------------ Fig. 4
+def test_vdpe_scalability_monotone():
+    rows = vdpe_scalability_table(PhotonicParams())
+    lanes = [r["lanes"] for r in rows]
+    laser = [r["laser_mw"] for r in rows]
+    assert lanes == sorted(lanes) and laser == sorted(laser)
+    by_lane = {r["lanes"]: r for r in rows}
+    assert by_lane[1024]["laser_mw"] < 1000.0  # paper's 1024-OAG point feasible
+
+
+def test_rx_power_is_papers_operating_point():
+    assert PhotonicParams().rx_power_w == pytest.approx(0.5e-6)
+
+
+# ------------------------------------------------------------------ Fig. 5
+def test_energy_breakdown_serializers_and_oags_dominate():
+    """Paper: 'serializers and OAGs dominate energy usage'."""
+    cfg = get_arch("bert-base")
+    rep = simulate(cfg, CHIP, seq=PAPER_SEQ_LEN[cfg.name])
+    e = rep.energy_j
+    # serialization machinery (fresh encode + replay registers + B-to-S) and
+    # the OAG modulators — the paper's "serializers and OAGs"
+    front = (e.get("serializer", 0) + e.get("replay", 0) + e.get("bts", 0)
+             + e.get("oag_mod", 0))
+    assert front > 0.4 * rep.total_energy_j
+    # ADC limited to final outputs must NOT dominate
+    assert e.get("adc", 0) < front
+
+
+# ----------------------------------------------------------- Fig. 6 + §III
+@pytest.mark.parametrize("model", list(PAPER_MODELS))
+def test_speedup_claim_vs_best_accelerator(model):
+    """>= 7.6x speedup vs the best non-ASTRA accelerator on every model."""
+    cfg = get_arch(model)
+    seq = PAPER_SEQ_LEN[cfg.name]
+    astra = simulate(cfg, CHIP, seq=seq)
+    accels = [
+        simulate_baseline(spec, cfg, seq)
+        for name, spec in BASELINES.items()
+        if name not in ("cpu", "gpu", "tpu")
+    ]
+    best = min(a.latency_s for a in accels)
+    assert best / astra.latency_s >= 7.6, f"{model}: speedup {best / astra.latency_s:.2f}"
+
+
+@pytest.mark.parametrize("model", list(PAPER_MODELS))
+def test_energy_claim_vs_accelerators_and_platforms(model):
+    cfg = get_arch(model)
+    seq = PAPER_SEQ_LEN[cfg.name]
+    astra = simulate(cfg, CHIP, seq=seq)
+    for name, spec in BASELINES.items():
+        rep = simulate_baseline(spec, cfg, seq)
+        ratio = rep.total_energy_j / astra.total_energy_j
+        if name in ("cpu", "gpu", "tpu"):
+            assert ratio > 1000.0, f"{model}@{name}: {ratio:.1f}x"
+        else:
+            assert ratio >= 1.3, f"{model}@{name}: {ratio:.2f}x"
+
+
+def test_compare_all_returns_astra_first():
+    cfg = get_arch("opt-350m")
+    reports = compare_all(cfg, CHIP, seq=PAPER_SEQ_LEN[cfg.name])
+    assert reports[0].name == cfg.name and len(reports) == 1 + len(BASELINES)
+
+
+# ---------------------------------------------------------------- op graphs
+def test_model_ops_macs_match_analytic_scale():
+    """Sanity: simulator op graph MACs ~ param_count for seq*batch tokens
+    (dense decoder: ~= N_params MACs per token, attention adds more)."""
+    cfg = get_arch("bert-base")
+    mm, _ = model_ops(cfg, seq=128, batch=1)
+    macs = sum(op.macs for op in mm)
+    approx = cfg.param_count() * 128
+    assert 0.5 * approx < macs < 3.0 * approx
+
+
+def test_moe_ops_use_active_params_only():
+    cfg = get_arch("qwen3-moe-30b-a3b")
+    mm, _ = model_ops(cfg, seq=64, batch=1)
+    macs = sum(op.macs for op in mm)
+    dense_equiv = cfg.param_count() * 64
+    active_equiv = cfg.active_param_count() * 64
+    assert macs < 0.5 * dense_equiv
+    assert macs > 0.3 * active_equiv

@@ -1,0 +1,102 @@
+"""Optimizer + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig, CompressorState, adamw_init, adamw_update, compress_init,
+    compressed_psum, cosine_schedule,
+)
+
+
+def test_adamw_converges_quadratic(key):
+    target = jax.random.normal(key, (16,))
+    params = {"x": jnp.zeros((16,))}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum((p["x"] - target) ** 2))(params)
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["x"] - target))) < 0.05
+
+
+def test_adamw_grad_clipping():
+    params = {"x": jnp.zeros((4,))}
+    state = adamw_init(params)
+    huge = {"x": jnp.full((4,), 1e6)}
+    _, _, stats = adamw_update(params, huge, state, AdamWConfig(clip_norm=1.0))
+    assert float(stats["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_weight_decay_shrinks_params(key):
+    params = {"x": jax.random.normal(key, (8,)) * 10}
+    state = adamw_init(params)
+    zero_g = {"x": jnp.zeros((8,))}
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.5)
+    p2, _, _ = adamw_update(params, zero_g, state, cfg)
+    assert float(jnp.linalg.norm(p2["x"])) < float(jnp.linalg.norm(params["x"]))
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, warmup=10, total=100)) == 0.0
+    assert abs(float(cosine_schedule(10, warmup=10, total=100)) - 1.0) < 1e-6
+    end = float(cosine_schedule(100, warmup=10, total=100))
+    assert abs(end - 0.1) < 1e-6  # min_ratio floor
+    # monotone decay after warmup
+    vals = [float(cosine_schedule(s, 10, 100)) for s in range(10, 101, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+# ----------------------------------------------------------- compression
+def _psum_sim(fn, *trees, axis="pod", n=2):
+    """Simulate an n-member pod axis with vmap(axis_name=...)."""
+    return jax.vmap(fn, axis_name=axis)(*trees)
+
+
+def test_compressed_psum_approximates_mean_reduce(key):
+    n = 2
+    g = jax.random.normal(key, (n, 64))  # per-pod gradients
+    grads = {"w": g}
+    state = compress_init({"w": g[0]})
+    states = jax.tree.map(lambda r: jnp.stack([r] * n), state.residual)
+
+    def body(g_leaf, r_leaf):
+        out, st = compressed_psum({"w": g_leaf}, "pod", CompressorState({"w": r_leaf}))
+        return out["w"], st.residual["w"]
+
+    out, _ = _psum_sim(body, g, states["w"])
+    want = jnp.mean(g, axis=0)  # compressed_psum averages (psum/n)
+    rel = float(jnp.linalg.norm(out[0] - want) / jnp.linalg.norm(want))
+    assert rel < 0.02  # int8 quantization noise
+
+
+def test_error_feedback_cancels_bias(key):
+    """Over repeated steps with a CONSTANT gradient, EF compression's
+    cumulative average converges to the true mean reduce (bias -> 0)."""
+    n = 2
+    g0 = jax.random.normal(key, (64,)) * 1e-3  # small grads stress quantizer
+    g1 = -g0 * 0.5
+    g = jnp.stack([g0, g1])
+    true_mean = jnp.mean(g, axis=0)
+
+    def body(g_leaf):
+        st = CompressorState({"w": jnp.zeros_like(g_leaf)})
+        acc = jnp.zeros_like(g_leaf)
+        outs = []
+        for _ in range(30):
+            out, st = compressed_psum({"w": g_leaf}, "pod", st)
+            acc = acc + out["w"]
+            outs.append(out["w"])
+        return acc / 30
+
+    avg = _psum_sim(body, g)[0]
+    rel = float(jnp.linalg.norm(avg - true_mean) / jnp.linalg.norm(true_mean))
+    assert rel < 0.01
+
+
+def test_compression_ratio():
+    """int8 payload is 4x smaller than fp32 — the DCN bytes the multi-pod
+    all-reduce saves (per-leaf scalar scale is negligible)."""
+    leaf = jnp.zeros((1024,), jnp.float32)
+    assert leaf.nbytes / jnp.zeros((1024,), jnp.int8).nbytes == 4.0

@@ -1,0 +1,86 @@
+"""OSSM multiplier laws.
+
+The paper's claim chain rests on: AND of decorrelated streams estimates the
+product; the deterministic thermometer x bresenham pairing makes the
+popcount equal round(m_x*m_w/128) to within 1 LSB (this is what lets 8-bit
++ 128-bit streams stay within 1.2% of FP32); LFSR pairing is the classic
+noisy estimator with known bias-free mean.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ossm import ossm_expected, ossm_multiply, sc_dot, sc_matmul_value
+from repro.core.quant import STREAM_LEN, quantize
+
+
+def test_deterministic_pairing_within_1lsb_exhaustive():
+    """|popcount - m_x*m_w/128| <= 1 for ALL 128x128 magnitude pairs."""
+    mx = jnp.arange(128, dtype=jnp.int8)[:, None]  # broadcast grid
+    mw = jnp.arange(128, dtype=jnp.int8)[None, :]
+    got = np.asarray(ossm_multiply(mx, mw, "thermometer", "bresenham"), np.float64)
+    want = np.asarray(mx, np.float64) * np.asarray(mw, np.float64) / STREAM_LEN
+    assert np.abs(got - want).max() <= 1.0 + 1e-9
+
+
+def test_sign_steering_all_quadrants():
+    for sx, sw in itertools.product((-1, 1), repeat=2):
+        qx = jnp.asarray([sx * 50], jnp.int8)
+        qw = jnp.asarray([sw * 40], jnp.int8)
+        got = int(ossm_multiply(qx, qw)[0])
+        assert np.sign(got) == sx * sw or got == 0
+        assert abs(got - sx * sw * 50 * 40 / 128) <= 1.0
+
+
+def test_lfsr_pairing_bounded_error():
+    """LFSR-vs-bresenham pairing: stochastic but bounded; mean error small."""
+    mx = jnp.arange(128, dtype=jnp.int8)[:, None]
+    mw = jnp.arange(128, dtype=jnp.int8)[None, :]
+    got = np.asarray(ossm_multiply(mx, mw, "lfsr", "bresenham"), np.float64)
+    want = np.asarray(mx, np.float64) * np.asarray(mw, np.float64) / STREAM_LEN
+    err = np.abs(got - want)
+    assert err.mean() < 2.0  # popcount units; classic SC noise level
+    assert err.max() < 16.0
+
+
+def test_zero_absorbing():
+    z = jnp.zeros((1,), jnp.int8)
+    anyv = jnp.asarray([127], jnp.int8)
+    assert int(ossm_multiply(z, anyv)[0]) == 0
+    assert int(ossm_multiply(anyv, z)[0]) == 0
+
+
+def test_full_scale():
+    m = jnp.asarray([127], jnp.int8)
+    # 127*127/128 = 126.0078 -> within 1
+    assert abs(int(ossm_multiply(m, m)[0]) - 126) <= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(-127, 127), min_size=1, max_size=64))
+def test_property_dot_linearity(vals):
+    """sc_dot == sum of elementwise ossm products (analog accumulation is
+    exact integer addition — accumulation adds NO error)."""
+    qx = jnp.asarray(vals, jnp.int8)
+    qw = jnp.asarray(vals[::-1], jnp.int8)
+    per_lane = ossm_multiply(qx, qw)
+    assert int(sc_dot(qx, qw)) == int(per_lane.sum())
+
+
+def test_sc_matmul_value_accuracy(rng):
+    x = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    out = sc_matmul_value(quantize(x), quantize(w, axis=0))
+    ref = x @ w
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.03  # quant noise + <=1 LSB stream rounding
+
+
+def test_ossm_expected_is_plain_product(rng):
+    q = jnp.asarray(rng.integers(-127, 128, (10,)), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(ossm_expected(q, q)), np.asarray(q, np.int32) ** 2
+    )

@@ -1,0 +1,69 @@
+"""Quantization unit + property tests (paper operand format: sign + 7-bit)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    MAG_MAX, STREAM_LEN, Calibrator, QTensor, fake_quant, int8_matmul_exact, quantize,
+)
+
+
+def test_range_and_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    qt = quantize(x)
+    assert qt.q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(qt.q))) <= MAG_MAX  # -128 code never used
+    err = jnp.max(jnp.abs(qt.dequantize() - x))
+    assert float(err) <= float(qt.scale) * 0.5 + 1e-6  # half-LSB rounding
+
+
+def test_per_channel_beats_per_tensor(rng):
+    # one giant-scale column would wreck per-tensor quantization
+    x = rng.standard_normal((128, 16)).astype(np.float32)
+    x[:, 3] *= 100.0
+    xj = jnp.asarray(x)
+    e_tensor = jnp.abs(quantize(xj).dequantize() - xj).mean()
+    e_chan = jnp.abs(quantize(xj, axis=0).dequantize() - xj).mean()
+    assert float(e_chan) < float(e_tensor) / 5
+
+
+def test_zero_input_safe():
+    qt = quantize(jnp.zeros((4, 4)))
+    assert float(jnp.abs(qt.dequantize()).max()) == 0.0
+    assert np.isfinite(float(qt.scale))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+def test_property_dequant_error_bounded(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n,)) * 10 ** rng.uniform(-3, 3), jnp.float32)
+    qt = quantize(x)
+    # |deq - x| <= scale/2 everywhere (symmetric round-to-nearest)
+    assert float(jnp.max(jnp.abs(qt.dequantize() - x))) <= float(qt.scale) * 0.5 + 1e-5
+
+
+def test_fake_quant_straight_through_grad(key):
+    x = jax.random.normal(key, (8, 8))
+    g = jax.grad(lambda t: jnp.sum(fake_quant(t) ** 2))(x)
+    # STE: gradient equals that of identity-through ~ 2*fake_quant(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * fake_quant(x)), rtol=1e-5)
+
+
+def test_int8_matmul_exact_matches_fp(rng):
+    x = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    out = int8_matmul_exact(quantize(x), quantize(w, axis=0))
+    rel = jnp.linalg.norm(out - x @ w) / jnp.linalg.norm(x @ w)
+    assert float(rel) < 0.02  # 8-bit PTQ noise floor
+
+
+def test_calibrator_converges(rng):
+    state = Calibrator.init()
+    for _ in range(50):
+        state = Calibrator.observe(state, jnp.asarray(rng.standard_normal(256) * 3))
+    scale = Calibrator.scale(state)
+    # absmax of 256 N(0, 3^2) samples ~ 3.3*sigma ~ 10; scale ~ 10/127
+    assert 6.0 / MAG_MAX < float(scale) < 14.0 / MAG_MAX

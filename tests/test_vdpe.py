@@ -1,0 +1,75 @@
+"""VDPE: pass tiling, analog accumulation, noise/ADC model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ossm import sc_matmul_value
+from repro.core.quant import quantize
+from repro.core.vdpe import VDPEConfig, sc_matmul, sc_matmul_error
+from repro.core import photonics
+
+
+@pytest.fixture()
+def operands(rng):
+    x = jnp.asarray(rng.standard_normal((8, 96)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((96, 12)), jnp.float32)
+    return quantize(x), quantize(w, axis=0), x @ w
+
+
+def test_noiseless_matches_functional_model(operands):
+    xq, wq, _ = operands
+    got = sc_matmul(xq, wq, VDPEConfig(lanes=32, noisy=False))
+    want = sc_matmul_value(xq, wq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("lanes", [8, 32, 96, 1024])
+def test_pass_tiling_invariance(operands, lanes):
+    """K-dim tiling across passes must not change the result (the PCA
+    integrates partial sums exactly — output-stationary invariant)."""
+    xq, wq, _ = operands
+    base = sc_matmul(xq, wq, VDPEConfig(lanes=96, noisy=False))
+    tiled = sc_matmul(xq, wq, VDPEConfig(lanes=lanes, noisy=False))
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(base), rtol=1e-6)
+
+
+def test_accuracy_vs_exact(operands):
+    xq, wq, exact = operands
+    err = sc_matmul_error(xq, wq, VDPEConfig(lanes=1024), exact)
+    assert err < 0.03
+
+
+def test_noise_increases_error_but_bounded(operands):
+    xq, wq, exact = operands
+    clean = sc_matmul_error(xq, wq, VDPEConfig(noisy=False), exact)
+    noisy = sc_matmul_error(
+        xq, wq, VDPEConfig(noisy=True, adc_bits=8), exact, key=jax.random.PRNGKey(1)
+    )
+    assert noisy >= clean * 0.9
+    assert noisy < 0.15  # still a usable operating point (paper Fig. 4)
+
+
+def test_adc_resolution_matters(operands):
+    xq, wq, exact = operands
+    e8 = sc_matmul_error(xq, wq, VDPEConfig(noisy=True, adc_bits=8), exact, key=jax.random.PRNGKey(0))
+    e4 = sc_matmul_error(xq, wq, VDPEConfig(noisy=True, adc_bits=4), exact, key=jax.random.PRNGKey(0))
+    assert e4 > e8
+
+
+def test_shot_noise_grows_with_lanes():
+    p = photonics.PhotonicParams()
+    assert photonics.shot_noise_sigma_bits(p, 1024) > photonics.shot_noise_sigma_bits(p, 64)
+
+
+def test_paper_operating_point_1024_lanes():
+    """Fig. 4 claim: >=1024 OAGs/wavelength at ~0.5uW/OAG is feasible —
+    accumulated shot noise stays below the 8-bit output ADC's quantization
+    step, so stochastic-analog accumulation, not noise, sets the precision."""
+    p = photonics.PhotonicParams()
+    sigma = photonics.shot_noise_sigma_bits(p, 1024)
+    full_scale = 1024 * 128.0  # all lanes, all-ones streams, in bit-charges
+    adc_lsb = full_scale / 2**8
+    assert sigma < 0.5 * adc_lsb
+    # and the laser budget stays in a sane per-wavelength envelope (< 1 W)
+    assert photonics.laser_power_w(p, 1024) < 1.0
