@@ -14,7 +14,7 @@ import time
 
 from benchmarks import (
     accuracy, energy_breakdown, energy_comparison, pairing_ablation, roofline,
-    speedup, vdpe_scaling,
+    serve_throughput, speedup, vdpe_scaling,
 )
 
 SECTIONS = {
@@ -26,6 +26,7 @@ SECTIONS = {
     "accuracy": accuracy.run,               # SIII accuracy claim (trains a model)
     "roofline": roofline.run,               # assignment SRoofline
     "roofline_compare": roofline.compare,   # SPerf: baseline vs optimized bounds
+    "serve_throughput": serve_throughput.run,  # ISSUE 1: fused vs per-step decode
 }
 
 

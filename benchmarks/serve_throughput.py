@@ -1,0 +1,142 @@
+"""Serving throughput: fused scan decode vs the seed per-step dispatch loop.
+
+Sweeps batch size x prompt-length mix on a reduced config and reports
+decode tok/s for:
+
+* ``unfused`` — the seed driver's loop: one ``jit(decode)`` dispatch per
+  token (host overhead per step),
+* ``fused``   — the serve engine's ``lax.scan`` chunked loop: one dispatch
+  per chunk (``repro.serve.decode_loop``),
+* ``engine``  — the full continuous-batching engine on the same workload
+  (packed prefill + chunked fused decode + accounting overheads).
+
+Claim under test (ISSUE 1): fused >= 2x unfused at batch 8.
+
+  PYTHONPATH=src python benchmarks/serve_throughput.py [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.astra_layer import ComputeConfig
+from repro.models.model import Model
+from repro.models.transformer import ModelOptions
+from repro.serve import GREEDY, ServeConfig, ServeEngine, make_fused_decode, packed_prefill, unfused_decode
+from repro.serve.sampling import sample_next_token
+
+GEN = 32
+
+
+def _setup(arch: str, mode: str, batch: int, prompt_lens, key):
+    cfg = get_arch(arch).reduced()
+    model = Model(cfg, ModelOptions(cc=ComputeConfig(mode)))
+    params = Model(cfg, ModelOptions()).init(key)
+    lens = [prompt_lens[i % len(prompt_lens)] for i in range(batch)]
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(key, i), (l,), 0, cfg.vocab))
+               for i, l in enumerate(lens)]
+    return cfg, model, params, prompts, lens
+
+
+def _prefill_uniform(model, params, prompts, max_len, key):
+    b = len(prompts)
+    s0 = prompts[0].shape[-1]
+    tokens = jnp.asarray(np.stack(prompts))
+    lengths = jnp.full((b,), s0, jnp.int32)
+    last, states = packed_prefill(model, params, tokens, lengths, max_len,
+                                  lengths_static=[s0] * b)
+    tok = sample_next_token(last, GREEDY, key, model.cfg)
+    return tok, states, jnp.full((b,), s0, jnp.int32)
+
+
+def _time_decode(fn, warmup: bool = True):
+    if warmup:
+        jax.block_until_ready(fn())
+    t0 = time.time()
+    toks = fn()
+    jax.block_until_ready(toks)
+    return time.time() - t0
+
+
+def bench_cell(arch: str, mode: str, batch: int, prompt_lens, chunk: int, log=print):
+    key = jax.random.PRNGKey(0)
+    cfg, model, params, prompts, lens = _setup(arch, mode, batch, prompt_lens, key)
+    max_len = max(lens) + GEN + 1
+    steps = GEN - 1
+
+    # uniform-length variants measure the *decode loop* in isolation
+    uni = [np.asarray(p)[: min(lens)] for p in prompts]
+    tok, states, pos = _prefill_uniform(model, params, uni, max_len, key)
+
+    t_unfused = _time_decode(
+        lambda: unfused_decode(model, params, tok, states, pos, key, steps, GREEDY)[0]
+    )
+    fused = make_fused_decode(model)
+    t_fused = _time_decode(
+        lambda: fused(params, tok, states, pos, key, steps=steps, sampler=GREEDY)[0]
+    )
+
+    # full engine on the mixed-length stream (end-to-end, incl. prefill)
+    def run_engine():
+        eng = ServeEngine(model, params, ServeConfig(
+            max_slots=batch, max_len=max_len, chunk_steps=chunk,
+            astra_accounting=False))
+        return [o.tokens for o in eng.generate_batch(prompts, GEN)]
+
+    run_engine()  # warm the jit caches
+    t0 = time.time()
+    outs = run_engine()
+    t_engine = time.time() - t0
+    n_engine = sum(t.shape[-1] for t in outs)
+
+    cell = {
+        "arch": arch, "mode": mode, "batch": batch,
+        "prompt_lens": sorted(set(lens)), "gen": GEN, "chunk_steps": chunk,
+        "unfused_tok_s": batch * steps / t_unfused,
+        "fused_tok_s": batch * steps / t_fused,
+        "engine_tok_s": n_engine / t_engine,
+        "fused_speedup": t_unfused / t_fused,
+    }
+    log(f"serve,{arch},{mode},b={batch},mix={'/'.join(map(str, cell['prompt_lens']))},"
+        f"unfused={cell['unfused_tok_s']:.1f},fused={cell['fused_tok_s']:.1f},"
+        f"engine={cell['engine_tok_s']:.1f},speedup={cell['fused_speedup']:.2f}x")
+    return cell
+
+
+def run(log=print):
+    log("# decode tok/s: fused scan vs per-step dispatch (reduced configs)")
+    cells = []
+    for batch in (1, 4, 8):
+        cells.append(bench_cell("stablelm-1.6b", "int8", batch, [32], chunk=8, log=log))
+    cells.append(bench_cell("stablelm-1.6b", "int8", 8, [16, 32, 64], chunk=8, log=log))
+    cells.append(bench_cell("stablelm-1.6b", "exact", 8, [32], chunk=8, log=log))
+    cells.append(bench_cell("recurrentgemma-2b", "int8", 8, [16, 32], chunk=8, log=log))
+    at8 = [c for c in cells if c["batch"] == 8 and c["arch"] == "stablelm-1.6b"
+           and c["mode"] == "int8"]
+    worst = min(c["fused_speedup"] for c in at8)
+    ok = worst >= 2.0
+    log(f"serve,min fused speedup at batch 8={worst:.2f}x (>=2.0),"
+        f"{'PASS' if ok else 'FAIL'}")
+    return {"cells": cells, "min_fused_speedup_b8": worst, "claim_pass": bool(ok)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="", help="write results to this path")
+    args = ap.parse_args(argv)
+    out = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

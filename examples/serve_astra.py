@@ -1,8 +1,10 @@
-"""End-to-end serving driver example (the paper's workload: inference).
+"""End-to-end serving example (the paper's workload: inference).
 
-Serves a small model with batched requests through the KV-cache decode path
-under the ASTRA int8 expectation mode, compares generations against the
-fp32 reference, and prints the modeled photonic hardware cost per request.
+Drives the continuous-batching serve engine (``repro.serve``) with a mixed
+prompt-length request stream — short and long prompts share one running
+batch, joining and leaving at chunk granularity — under the ASTRA int8
+expectation mode, compares generations against the fp32 reference, and
+prints the modeled photonic hardware cost per request.
 
   PYTHONPATH=src python examples/serve_astra.py [--arch stablelm-1.6b]
 """
@@ -13,7 +15,8 @@ from repro.launch.serve import main
 if __name__ == "__main__":
     argv = sys.argv[1:] or [
         "--arch", "stablelm-1.6b", "--reduced",
-        "--batch", "4", "--prompt-len", "32", "--gen", "16",
+        "--batch", "6", "--prompt-mix", "16,32,64", "--gen", "16",
+        "--max-slots", "4", "--chunk-steps", "8",
         "--mode", "int8", "--compare-exact",
     ]
     main(argv)

@@ -9,7 +9,10 @@ weight-stationary reconfiguration penalty.  Within a core the X operand is
 optically broadcast to all VDPEs (see ``core.energy``).
 
 ``map_matmul`` returns wall latency + per-component energy for one matmul;
-``core.simulator`` walks whole models through it.
+``core.simulator`` walks whole models through it.  Which ops are
+VDPE-mappable at all (vs routed to the electronic NLUs via
+``map_elementwise``) is catalogued in DESIGN.md §Arch-applicability; the
+chip organization being modeled is DESIGN.md §1.
 """
 from __future__ import annotations
 

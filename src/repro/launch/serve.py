@@ -1,20 +1,21 @@
-"""Batched serving driver with the ASTRA execution modes.
+"""Serving CLI over the continuous-batching engine (``repro.serve``).
 
-Inference is the paper's target workload: this driver prefills a batch of
-prompts, then decodes greedily with the KV/recurrent-state caches, under any
-of the three ASTRA numeric modes:
+Inference is the paper's target workload: this driver admits a batch of
+requests (uniform or mixed prompt lengths) into the slotted serve engine,
+decodes them through the fused ``lax.scan`` loop, and reports measured
+tok/s plus the *modeled* ASTRA chip latency/energy per request
+(``core.simulator`` — the numbers Figs. 5/6 are built from), under any of
+the three ASTRA numeric modes:
 
   exact — bf16 reference            (accuracy oracle)
   int8  — ASTRA expectation path    (deployable quantized fast path)
   sc    — bit-true 128-bit streams  (the paper's stochastic arithmetic)
 
-Alongside tokens/s it reports the *modeled* ASTRA chip latency/energy for
-the same workload via ``core.simulator`` — the numbers Figs. 5/6 are built
-from — so one command shows both numerical fidelity and the hardware story.
-
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
       --batch 4 --prompt-len 32 --gen 16 --mode int8 --compare-exact
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+      --prompt-mix 16,32,64 --batch 6 --gen 16 --temperature 0.8 --top-k 40
 """
 from __future__ import annotations
 
@@ -28,40 +29,85 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.astra_layer import ComputeConfig
 from repro.core.energy import AstraChipConfig
-from repro.core.simulator import simulate
-from repro.launch.mesh import make_host_mesh
 from repro.models.model import Model
 from repro.models.transformer import ModelOptions
+from repro.serve import (
+    GREEDY, SamplerConfig, ServeConfig, ServeEngine, make_fused_decode,
+    packed_prefill,
+)
+from repro.serve.sampling import sample_next_token
 
 
-def generate(model: Model, params, prompts: jax.Array, gen_len: int, max_len: int):
-    """Greedy decode. prompts [B, S0] (or [B, C, S0]).  Returns tokens, t/s."""
+def generate(model: Model, params, prompts: jax.Array, gen_len: int, max_len: int,
+             sampler: SamplerConfig = GREEDY, key=None):
+    """Uniform-length batch decode.  prompts [B, S0] (or [B, C, S0]).
+
+    Kept as the simple entry point (packed prefill + one fused scan over
+    all ``gen_len`` steps).  Returns (prompt+generated tokens, decode tok/s).
+    """
     cfg = model.cfg
+    prompts = jnp.asarray(prompts, jnp.int32)
     b = prompts.shape[0]
     s0 = prompts.shape[-1]
-    # feed the prompt through decode steps against a max_len-preallocated
-    # state (robust across KV / ring-buffer / recurrent archs), then sample
-    states = model.init_decode_state(b, max_len)
-    decode = jax.jit(model.decode)
-    logits = None
-    for t in range(s0):
-        tok_t = prompts[..., t : t + 1]
-        logits, states = decode(params, tok_t, states, jnp.int32(t))
-    out = [prompts]
+    if gen_len == 0:
+        return prompts, 0.0
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    lengths = jnp.full((b,), s0, jnp.int32)
+    last_logits, states = packed_prefill(
+        model, params, prompts, lengths, max_len, lengths_static=[s0] * b
+    )
+    key, sub = jax.random.split(key)
+    first = sample_next_token(last_logits, sampler, sub, cfg)  # [B,1] | [B,C,1]
+    pieces = [prompts, first]
+    tps = 0.0
+    if gen_len > 1:
+        fused = make_fused_decode(model)
+        pos0 = jnp.full((b,), s0, jnp.int32)
+        args = (params, first, states, pos0, key)
+        kw = dict(steps=gen_len - 1, sampler=sampler)
+        jax.block_until_ready(fused(*args, **kw))  # warm: compile outside t0
+        t0 = time.time()
+        toks, _ = fused(*args, **kw)
+        jax.block_until_ready(toks)
+        # count only the steps inside the timed window (the first token
+        # came from prefill, before t0)
+        tps = b * (gen_len - 1) / max(time.time() - t0, 1e-9)
+        pieces.append(toks)
+    return jnp.concatenate(pieces, axis=-1), tps
+
+
+def _prompt_lengths(args) -> list:
+    if args.prompt_mix:
+        mix = [int(x) for x in args.prompt_mix.split(",")]
+        return [mix[i % len(mix)] for i in range(args.batch)]
+    return [args.prompt_len] * args.batch
+
+
+def _make_prompts(cfg, lengths, key):
+    prompts = []
+    for i, l in enumerate(lengths):
+        k = jax.random.fold_in(key, i)
+        shape = (cfg.n_codebooks, l) if cfg.n_codebooks else (l,)
+        prompts.append(np.asarray(jax.random.randint(k, shape, 0, cfg.vocab)))
+    return prompts
+
+
+def _run_engine(model, params, prompts, args, sampler):
+    max_len = max(p.shape[-1] for p in prompts) + args.gen + 1
+    cfg = ServeConfig(max_slots=args.max_slots or len(prompts), max_len=max_len,
+                      chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed)
+    # warm run on a throwaway engine: the jitted prefill/chunk programs are
+    # memoized per model, so the timed run below measures serving, not XLA
+    # compilation
+    ServeEngine(model, params, cfg, chip=AstraChipConfig()).generate_batch(
+        prompts, args.gen
+    )
+    engine = ServeEngine(model, params, cfg, chip=AstraChipConfig())
     t0 = time.time()
-    next_tok = jnp.argmax(logits[..., -1:, :], axis=-1).astype(jnp.int32)
-    if cfg.n_codebooks:
-        next_tok = jnp.swapaxes(next_tok, -1, -2)  # [B, C, 1]
-    for t in range(s0, s0 + gen_len):
-        out.append(next_tok)
-        logits, states = decode(params, next_tok, states, jnp.int32(t))
-        next_tok = jnp.argmax(logits[..., -1:, :], axis=-1).astype(jnp.int32)
-        if cfg.n_codebooks:
-            next_tok = jnp.swapaxes(next_tok, -1, -2)
-    jax.block_until_ready(logits)
-    dt = time.time() - t0
-    toks = jnp.concatenate(out, axis=-1)
-    return toks, (b * gen_len) / dt
+    outs = engine.generate_batch(prompts, args.gen)
+    dt = max(time.time() - t0, 1e-9)
+    return outs, sum(o.gen_len for o in outs) / dt
 
 
 def main(argv=None):
@@ -70,8 +116,17 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-mix", default="",
+                    help="comma list of prompt lengths cycled over the batch, "
+                         "e.g. 16,32,64 (continuous batching handles the mix)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mode", default="int8", choices=["exact", "int8", "sc"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--chunk-steps", type=int, default=8,
+                    help="fused decode steps per dispatch")
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="engine slots (0 = one per request)")
     ap.add_argument("--compare-exact", action="store_true",
                     help="also run exact mode and report token agreement")
     ap.add_argument("--seed", type=int, default=0)
@@ -81,29 +136,30 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     key = jax.random.PRNGKey(args.seed)
-    max_len = args.prompt_len + args.gen + 1
+    sampler = SamplerConfig(args.temperature, args.top_k)
 
     base_model = Model(cfg, ModelOptions())
     params = base_model.init(key)
-    shape = (args.batch, cfg.n_codebooks, args.prompt_len) if cfg.n_codebooks else (args.batch, args.prompt_len)
-    prompts = jax.random.randint(key, shape, 0, cfg.vocab, jnp.int32)
+    lengths = _prompt_lengths(args)
+    prompts = _make_prompts(cfg, lengths, key)
 
     model = Model(cfg, ModelOptions(cc=ComputeConfig(args.mode)))
-    toks, tps = generate(model, params, prompts, args.gen, max_len)
-    print(f"[{args.mode}] generated {args.gen} tokens x batch {args.batch}: {tps:.1f} tok/s")
+    outs, tps = _run_engine(model, params, prompts, args, sampler)
+    print(f"[{args.mode}] {len(outs)} requests (prompt lens {sorted(set(lengths))}), "
+          f"{args.gen} new tokens each: {tps:.1f} tok/s")
+    for o in outs:
+        hw = o.hardware
+        print(f"  req {o.request_id}: prompt {o.prompt.shape[-1]:>4} gen {o.gen_len:>3} | "
+              f"ASTRA latency {hw.latency_s * 1e6:.3f} us, energy {hw.energy_j * 1e3:.3f} mJ, "
+              f"{hw.energy_per_mac_j * 1e12:.3f} pJ/MAC")
 
     if args.compare_exact and args.mode != "exact":
-        toks_ref, _ = generate(base_model, params, prompts, args.gen, max_len)
-        agree = float(jnp.mean((toks == toks_ref).astype(jnp.float32)))
+        outs_ref, _ = _run_engine(base_model, params, prompts, args, sampler)
+        agree = np.mean([
+            np.mean(o.tokens == r.tokens) for o, r in zip(outs, outs_ref)
+        ])
         print(f"token agreement vs exact: {agree * 100:.2f}%")
-
-    # hardware story: modeled ASTRA latency/energy for this workload
-    chip = AstraChipConfig()
-    rep = simulate(cfg, chip, seq=args.prompt_len + args.gen, batch=args.batch)
-    print(f"ASTRA model: latency {rep.latency_s * 1e3:.3f} ms, "
-          f"energy {rep.total_energy_j * 1e3:.3f} mJ, "
-          f"{rep.macs / 1e9:.2f} GMACs ({rep.energy_per_mac_j * 1e12:.3f} pJ/MAC)")
-    return toks
+    return outs
 
 
 if __name__ == "__main__":

@@ -51,7 +51,11 @@ def _merge_heads(x: jax.Array) -> jax.Array:
 
 def _sdpa(q, k, v, *, causal: bool, window: int, q_offset: int | jax.Array = 0,
           kv_len: Optional[jax.Array] = None, softcap: float = 0.0) -> jax.Array:
-    """jnp attention. q [B,H,Sq,hd], k/v [B,KV,Sk,hd]; GQA via head groups."""
+    """jnp attention. q [B,H,Sq,hd], k/v [B,KV,Sk,hd]; GQA via head groups.
+
+    ``kv_len`` may be a scalar or a per-batch ``[B]`` vector (the serve
+    engine's continuous batching runs slots at different positions).
+    """
     b, h, sq, hd = q.shape
     kvh, sk = k.shape[1], k.shape[2]
     g = h // kvh
@@ -71,9 +75,13 @@ def _sdpa(q, k, v, *, causal: bool, window: int, q_offset: int | jax.Array = 0,
         mask &= q_pos >= k_pos
     if window > 0:
         mask &= (q_pos - k_pos) < window
-    if kv_len is not None:
-        mask &= k_pos < kv_len
-    s = jnp.where(mask[None, None, None], s, -1e30)
+    if kv_len is not None and jnp.ndim(kv_len) == 1:
+        bmask = mask[None] & (k_pos[None] < kv_len[:, None, None])  # [B, sq, sk]
+        s = jnp.where(bmask[:, None, None], s, -1e30)
+    else:
+        if kv_len is not None:
+            mask &= k_pos < kv_len
+        s = jnp.where(mask[None, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgql,bkld->bkgqd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
@@ -147,7 +155,12 @@ def _make_cache(k, v, kind: str, cfg: ArchConfig, s: int, max_len: Optional[int]
     )
 
 
-def init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+def init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype=None) -> KVCache:
+    """Zeroed decode cache.  Cache dtype follows the model dtype so the
+    decode path and a full-sequence prefill (which emits KV in model
+    dtype) agree bit-for-bit — bf16 models keep the compact bf16 cache."""
+    if dtype is None:
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     if kind == "local" and cfg.window:
         max_len = min(max_len, cfg.window)
     if kind == "xattn":
@@ -160,18 +173,20 @@ def attn_decode(
     p,
     x: jax.Array,  # [B, 1, D]
     cache: KVCache,
-    pos: jax.Array,  # [] int32 — absolute position of the new token
+    pos: jax.Array,  # [] int32 — absolute position of the new token, or [B]
     cfg: ArchConfig,
     *,
     kind: str,
     cc: ComputeConfig = EXACT,
 ) -> Tuple[jax.Array, KVCache]:
     b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1  # continuous batching: each slot at its own pos
     q = shard_act(
         _split_heads(dense(p["wq"], x, cc), cfg.n_heads, cfg.head_dim),
         ("batch", "heads", None, None),
     )
-    posb = jnp.broadcast_to(pos[None, None], (b, 1))
+    posb = pos[:, None] if per_slot else jnp.broadcast_to(pos[None, None], (b, 1))
     if kind == "xattn":
         # static frontend KV; no rope, full visibility
         o = _sdpa(q, cache.k, cache.v, causal=False, window=0, softcap=cfg.logit_softcap)
@@ -183,8 +198,15 @@ def attn_decode(
     s_cache = cache.k.shape[2]
     # global caches are pre-allocated >= pos+1 (no wrap); local rings wrap
     slot = pos % s_cache if kind == "local" else pos
-    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, 0, slot, 0))
-    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, 0, slot, 0))
+    if per_slot:
+        def _write(c, n, s):
+            return jax.lax.dynamic_update_slice(c, n, (0, s, 0))
+
+        k = jax.vmap(_write)(cache.k, k_new.astype(cache.k.dtype), slot)
+        v = jax.vmap(_write)(cache.v, v_new.astype(cache.v.dtype), slot)
+    else:
+        k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, 0, slot, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, 0, slot, 0))
     if kind == "local":
         # ring buffer: every resident entry is within the window; valid count
         kv_len = jnp.minimum(pos + 1, s_cache)

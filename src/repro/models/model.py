@@ -60,10 +60,13 @@ class Model:
         return loss, {"loss": loss, "aux": aux}
 
     # ------------------------------------------------------------- serve
-    def prefill(self, params, batch):
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Full-sequence pass emitting serving states.  ``max_len`` pads the
+        KV caches to the serve engine's pre-allocated slot length."""
         logits, _, states = forward(
             params, batch["tokens"], self.cfg, self.opts,
             vision_embeds=batch.get("vision_embeds"), return_states=True,
+            max_len=max_len,
         )
         return logits, states
 

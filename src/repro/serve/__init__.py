@@ -1,0 +1,31 @@
+"""Continuous-batching serving subsystem (DESIGN.md §Serving engine).
+
+Public surface:
+
+* :class:`~repro.serve.engine.ServeEngine` — request queue + slotted state
+  + fused chunked decode + per-request ASTRA accounting.
+* :func:`~repro.serve.decode_loop.make_fused_decode` /
+  :func:`~repro.serve.decode_loop.unfused_decode` — the scan-fused decode
+  loop and its per-dispatch oracle.
+* :func:`~repro.serve.prefill.pack_prompts` /
+  :func:`~repro.serve.prefill.packed_prefill` — mixed-length prefill packing.
+* :class:`~repro.serve.sampling.SamplerConfig` — greedy / temperature / top-k.
+"""
+from repro.serve.decode_loop import make_fused_decode, unfused_decode
+from repro.serve.engine import Request, RequestOutput, ServeConfig, ServeEngine
+from repro.serve.prefill import full_seq_packable, pack_prompts, packed_prefill
+from repro.serve.sampling import GREEDY, SamplerConfig
+
+__all__ = [
+    "GREEDY",
+    "Request",
+    "RequestOutput",
+    "SamplerConfig",
+    "ServeConfig",
+    "ServeEngine",
+    "full_seq_packable",
+    "make_fused_decode",
+    "pack_prompts",
+    "packed_prefill",
+    "unfused_decode",
+]

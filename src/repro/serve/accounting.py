@@ -1,0 +1,56 @@
+"""Per-request ASTRA hardware accounting for the serve engine.
+
+Each completed request gets the *modeled* photonic cost of its own
+workload — prefill over the prompt plus one forward per generated token —
+from ``core.simulator.simulate``, so serving reports measured tok/s and
+the paper's latency/energy story side by side (DESIGN.md
+§Arch-applicability describes what maps to VDPEs vs electronic NLUs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Dict
+
+from repro.configs.base import ArchConfig
+from repro.core.energy import AstraChipConfig
+from repro.core.simulator import simulate
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestHardwareReport:
+    latency_s: float
+    energy_j: float
+    macs: int
+    energy_per_mac_j: float
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+@lru_cache(maxsize=4096)
+def _simulate_cached(cfg: ArchConfig, chip: AstraChipConfig, seq: int):
+    rep = simulate(cfg, chip, seq=seq, batch=1)
+    return rep.latency_s, rep.total_energy_j, rep.macs
+
+
+def request_hardware_report(cfg: ArchConfig, chip: AstraChipConfig,
+                            prompt_len: int, gen_len: int) -> RequestHardwareReport:
+    """Modeled chip cost of one request.
+
+    Prefill is one forward over the prompt; each decode step is a forward
+    over one token with the context it attends to — approximated (as the
+    paper's methodology does) by a single forward at the final sequence
+    length, which upper-bounds per-token context.
+    """
+    lat = en = macs = 0.0
+    p_lat, p_en, p_macs = _simulate_cached(cfg, chip, max(prompt_len, 1))
+    lat, en, macs = lat + p_lat, en + p_en, macs + p_macs
+    if gen_len > 0:
+        # decode: gen_len single-token forwards amortized at full context
+        d_lat, d_en, d_macs = _simulate_cached(cfg, chip, prompt_len + gen_len)
+        scale = gen_len / max(prompt_len + gen_len, 1)
+        lat += d_lat * scale
+        en += d_en * scale
+        macs += d_macs * scale
+    return RequestHardwareReport(lat, en, int(macs), en / max(macs, 1.0))

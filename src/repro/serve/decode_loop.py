@@ -1,0 +1,78 @@
+"""Fused decode: N serving steps compiled into ONE XLA program.
+
+The seed driver dispatched ``jit(decode)`` once per token — at small batch
+sizes the per-dispatch host overhead (argument flattening, device sync,
+python sampling) dominates the actual math.  Here the whole
+decode->sample->feed-back loop is a ``jax.lax.scan`` body, so a chunk of
+``steps`` tokens costs one dispatch and XLA pipelines the steps.
+
+Positions are per-slot (``pos [B]``): the continuous-batching engine runs
+slots at different absolute positions in the same fused chunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.serve.sampling import SamplerConfig, sample_next_token
+
+
+@functools.lru_cache(maxsize=64)
+def make_fused_decode(model: Model):
+    """Build a jitted ``(params, tok, states, pos, key, steps, sampler)`` fn.
+
+    Returns tokens ``[B, steps]`` (or ``[B, C, steps]``), plus the carried
+    (next_tok, states, pos, key).  ``steps`` and ``sampler`` are static:
+    each distinct chunk length compiles once and is cached by jit.
+    Memoized per (hashable, frozen) ``Model`` so every engine instance over
+    the same model shares one jit cache — no recompiles across engines.
+    """
+
+    def fused(params, tok, states, pos, key, steps: int, sampler: SamplerConfig):
+        def step(carry, _):
+            tok, states, pos, key = carry
+            logits, states = model.decode(params, tok, states, pos)
+            key, sub = jax.random.split(key)
+            nxt = sample_next_token(logits, sampler, sub, model.cfg)
+            return (nxt, states, pos + 1, key), nxt
+
+        carry, toks = jax.lax.scan(step, (tok, states, pos, key), length=steps)
+        # toks [steps, B, 1] | [steps, B, C, 1] -> [B, steps] | [B, C, steps]
+        toks = jnp.moveaxis(toks[..., 0], 0, -1)
+        return toks, carry
+
+    return jax.jit(fused, static_argnames=("steps", "sampler"))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_decode(model: Model):
+    # memoized so repeated unfused_decode calls stay warm — the benchmark
+    # baseline must measure per-step dispatch, not re-trace/compile time
+    return jax.jit(model.decode)
+
+
+def unfused_decode(model: Model, params, tok, states, pos, key, steps: int,
+                   sampler: SamplerConfig) -> Tuple[jax.Array, tuple]:
+    """Seed-style reference loop: one ``jit(decode)`` dispatch per token.
+
+    Kept as the parity oracle for the fused scan (and as the benchmark
+    baseline the fused loop is measured against).
+    """
+    decode = _jitted_decode(model)
+    out = []
+    pos = jnp.asarray(pos, jnp.int32)
+    for _ in range(steps):
+        logits, states = decode(params, tok, states, pos)
+        key, sub = jax.random.split(key)
+        tok = sample_next_token(logits, sampler, sub, model.cfg)
+        out.append(tok)
+        pos = pos + 1
+    # out entries are [B, 1] (or [B, C, 1]); concat on -1 matches the scan layout
+    toks = jnp.concatenate(out, axis=-1) if out else jnp.zeros(
+        tok.shape[:-1] + (0,), jnp.int32
+    )
+    return toks, (tok, states, pos, key)

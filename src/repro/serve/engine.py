@@ -1,0 +1,244 @@
+"""Continuous-batching serve engine over the fused scan decode.
+
+The engine owns a fixed grid of ``max_slots`` decode slots backed by one
+pre-allocated slotted state pytree (``Model.init_decode_state``).  Requests
+with different prompt lengths and generation budgets flow through it:
+
+  queue -> [admit: packed prefill -> scatter into free slots]
+        -> [fused decode chunks: one XLA dispatch per chunk]
+        -> [retire finished slots -> per-request ASTRA accounting]
+
+Admission and retirement happen between chunks; a chunk never runs past
+the earliest-finishing active slot (``steps = min(chunk_steps,
+min(remaining))``), so requests join and leave at step granularity and no
+slot ever generates beyond its budget.  Slots decode at *different*
+absolute positions inside one fused chunk — ``pos`` is a per-slot vector
+threaded down to the attention cache writes (``models.attention``).
+
+Inactive slots still ride through the batch (fixed shapes keep one
+compiled program); whatever they compute is discarded, and admission
+overwrites the slot's entire state before it is ever read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import AstraChipConfig
+from repro.models.model import Model
+from repro.serve.accounting import RequestHardwareReport, request_hardware_report
+from repro.serve.decode_loop import make_fused_decode
+from repro.serve.prefill import pack_prompts, packed_prefill
+from repro.serve.sampling import GREEDY, SamplerConfig, sample_next_token
+from repro.serve.slots import scatter_states
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 8
+    max_len: int = 256  # pre-allocated per-slot state length
+    chunk_steps: int = 8  # fused steps per dispatch (1 = per-step batching)
+    sampler: SamplerConfig = GREEDY
+    seed: int = 0
+    astra_accounting: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray  # [S] or [C, S] multi-codebook, int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[-1])
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    request_id: int
+    prompt: np.ndarray
+    tokens: np.ndarray  # generated tokens [G] (or [C, G])
+    wall_time_s: float
+    hardware: Optional[RequestHardwareReport] = None
+
+    @property
+    def gen_len(self) -> int:
+        return int(self.tokens.shape[-1])
+
+    @property
+    def full_sequence(self) -> np.ndarray:
+        return np.concatenate([self.prompt, self.tokens], axis=-1)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    pos: int  # absolute position of the next decode write
+    remaining: int  # tokens still to generate
+    generated: List[np.ndarray]
+    t_start: float
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, config: ServeConfig = ServeConfig(),
+                 chip: Optional[AstraChipConfig] = None):
+        cfg = model.cfg
+        self.model = model
+        self.params = params
+        self.config = config
+        self.chip = chip or AstraChipConfig()
+        self._fused = make_fused_decode(model)
+        self._queue: deque[Request] = deque()
+        self._slots: List[Optional[_Slot]] = [None] * config.max_slots
+        self._finished: Dict[int, RequestOutput] = {}
+        self._order: List[int] = []
+        self._next_id = 0
+        self._key = jax.random.PRNGKey(config.seed)
+        self._states = model.init_decode_state(config.max_slots, config.max_len)
+        tok_shape = ((config.max_slots, cfg.n_codebooks, 1) if cfg.n_codebooks
+                     else (config.max_slots, 1))
+        self._cur_tok = jnp.zeros(tok_shape, jnp.int32)
+        # the full-seq prefill emits window-sized rings; when the window
+        # exceeds the pre-allocated max_len the slotted cache is smaller
+        # (init_cache clamps), so prefill must go through the scan path
+        self._force_scan_prefill = (
+            any(k == "local" for k in cfg.layer_kinds) and config.max_len < cfg.window
+        )
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.shape[-1] + max_new_tokens > self.config.max_len:
+            raise ValueError(
+                f"prompt_len {prompt.shape[-1]} + max_new {max_new_tokens} "
+                f"exceeds max_len {self.config.max_len}"
+            )
+        rid = self._next_id
+        self._next_id += 1
+        req = Request(rid, prompt, max_new_tokens, eos_id)
+        self._order.append(rid)
+        if max_new_tokens == 0:
+            # nothing to decode: complete without ever taking a slot
+            self._complete(req, [], time.time())
+        else:
+            self._queue.append(req)
+        return rid
+
+    # ------------------------------------------------------------ engine
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    def run(self) -> List[RequestOutput]:
+        """Drain queue and slots; outputs in submission order."""
+        while self.has_work():
+            self.step()
+        return [self._finished[rid] for rid in self._order]
+
+    def step(self) -> List[RequestOutput]:
+        """Admit + one fused chunk.  Returns requests finished this step."""
+        before = set(self._finished)
+        self._admit()
+        self._decode_chunk()
+        return [self._finished[rid] for rid in self._order
+                if rid in self._finished and rid not in before]
+
+    # ------------------------------------------------------------- admit
+    def _admit(self):
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        n = min(len(free), len(self._queue))
+        if n == 0:
+            return
+        slots_ids = free[:n]
+        reqs = [self._queue.popleft() for _ in range(n)]
+        t_start = time.time()
+        tokens, lengths = pack_prompts([r.prompt for r in reqs], self.model.cfg)
+        last_logits, small_states = packed_prefill(
+            self.model, self.params, tokens, lengths, self.config.max_len,
+            lengths_static=[r.prompt_len for r in reqs],
+            force_scan=self._force_scan_prefill,
+        )
+        self._key, sub = jax.random.split(self._key)
+        first = sample_next_token(last_logits, self.config.sampler, sub, self.model.cfg)
+        ids = jnp.asarray(slots_ids, jnp.int32)
+        self._states = scatter_states(self._states, small_states, ids)
+        self._cur_tok = self._cur_tok.at[ids].set(first)
+        first_np = np.asarray(first)  # [n, 1] or [n, C, 1]
+        for j, (i, req) in enumerate(zip(slots_ids, reqs)):
+            tok0 = first_np[j]  # [1] or [C, 1]
+            slot = _Slot(req, pos=req.prompt_len, remaining=req.max_new_tokens - 1,
+                         generated=[tok0], t_start=t_start)
+            if self._hit_eos(req, tok0) or slot.remaining == 0:
+                self._retire(slot)
+            else:
+                self._slots[i] = slot
+
+    # ------------------------------------------------------------- chunk
+    def _decode_chunk(self):
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return
+        steps = min(self.config.chunk_steps,
+                    min(self._slots[i].remaining for i in active))
+        pos = np.zeros(self.config.max_slots, np.int32)
+        for i in active:
+            pos[i] = self._slots[i].pos
+        self._key, sub = jax.random.split(self._key)
+        toks, (next_tok, states, _, _) = self._fused(
+            self.params, self._cur_tok, self._states, jnp.asarray(pos), sub,
+            steps=steps, sampler=self.config.sampler,
+        )
+        self._states = states
+        self._cur_tok = next_tok
+        toks_np = np.asarray(toks)  # [B, steps] or [B, C, steps]
+        for i in active:
+            slot = self._slots[i]
+            slot.generated.append(toks_np[i])
+            slot.pos += steps
+            slot.remaining -= steps
+            if slot.remaining == 0 or self._hit_eos(slot.req, toks_np[i]):
+                self._retire(slot)
+                self._slots[i] = None
+
+    # ------------------------------------------------------------ retire
+    def _hit_eos(self, req: Request, toks: np.ndarray) -> bool:
+        if req.eos_id is None or toks.ndim > 1:  # no EOS over codebook grids
+            return False
+        return bool(np.any(toks == req.eos_id))
+
+    def _retire(self, slot: _Slot):
+        gen = np.concatenate(slot.generated, axis=-1)
+        if slot.req.eos_id is not None and gen.ndim == 1:
+            hits = np.nonzero(gen == slot.req.eos_id)[0]
+            if hits.size:
+                gen = gen[: hits[0] + 1]  # keep the EOS, drop overshoot
+        self._complete(slot.req, gen, slot.t_start)
+
+    def _complete(self, req: Request, gen, t_start: float):
+        gen = np.asarray(gen, np.int32)
+        if gen.size == 0:
+            shape = (req.prompt.shape[0], 0) if req.prompt.ndim == 2 else (0,)
+            gen = np.zeros(shape, np.int32)
+        hw = None
+        if self.config.astra_accounting:
+            hw = request_hardware_report(
+                self.model.cfg, self.chip, req.prompt_len, int(gen.shape[-1])
+            )
+        self._finished[req.id] = RequestOutput(
+            req.id, req.prompt, gen, time.time() - t_start, hw
+        )
+
+    # -------------------------------------------------------- convenience
+    def generate_batch(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
+                       eos_id: Optional[int] = None) -> List[RequestOutput]:
+        """Submit a batch and drain — outputs in prompt order."""
+        ids = [self.submit(p, max_new_tokens, eos_id) for p in prompts]
+        self.run()
+        return [self._finished[rid] for rid in ids]

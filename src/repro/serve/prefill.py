@@ -1,0 +1,165 @@
+"""Prefill packer: mixed-length prompts -> one prefill call.
+
+Prompts are right-padded to the longest prompt in the admitted group and
+run through a single XLA program; per-request true lengths mask everything
+the padding could corrupt.  Two strategies, chosen per architecture:
+
+* **full-seq** (``forward`` with ``return_states``) — one parallel pass
+  over the packed grid.  Safe for pure global/cross-attention stacks even
+  with padding: padded positions write garbage KV *above* each request's
+  true length, and the decode path overwrites slot ``pos`` before its
+  ``kv_len = pos+1`` mask ever exposes it.  Also safe for *any*
+  architecture when all prompts have equal length (no padding at all).
+* **masked scan** (``lax.scan`` over ``decode_step``) — one fused XLA
+  program feeding the packed prompt token-by-token, with per-slot state
+  updates gated on ``t < length``.  This is the generic fallback for
+  recurrent blocks (RG-LRU, xLSTM) and sliding-window rings, whose states
+  would absorb padding garbage under a padded full-sequence pass.
+
+Why sliding-window ("local") blocks are excluded from full-seq packing:
+``_make_cache`` keeps only the last ``window`` positions of the *padded*
+sequence, so a short request's real KV can be rolled out of the ring by
+padding before decode ever starts.
+
+MoE note: the engine prefils MoE architectures drop-free (capacity factor
+= n_experts, mirroring the decode path's ``full_capacity``) so that padded
+slots cannot compete real tokens out of expert capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+from repro.serve.slots import select_states
+
+FULL_SEQ_KINDS = ("attn", "xattn")
+
+
+def pack_prompts(prompts: Sequence[np.ndarray], cfg: ArchConfig,
+                 pad_id: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Right-pad prompts to a common grid.
+
+    Each prompt is ``[S_i]`` (or ``[C, S_i]`` multi-codebook).  Returns
+    (tokens ``[B, S_max]`` / ``[B, C, S_max]``, lengths ``[B]`` int32).
+    """
+    lens = [int(np.asarray(p).shape[-1]) for p in prompts]
+    assert all(l > 0 for l in lens), "empty prompt"
+    s_max = max(lens)
+    rows = []
+    for p in prompts:
+        p = np.asarray(p, np.int32)
+        pad = s_max - p.shape[-1]
+        width = [(0, 0)] * (p.ndim - 1) + [(0, pad)]
+        rows.append(np.pad(p, width, constant_values=pad_id))
+    return jnp.asarray(np.stack(rows)), jnp.asarray(lens, jnp.int32)
+
+
+def full_seq_packable(cfg: ArchConfig, lengths: Sequence[int]) -> bool:
+    """Whether the padded full-sequence prefill is exact for this workload."""
+    if len(set(int(l) for l in lengths)) <= 1:
+        return True  # no padding, any architecture
+    return all(k in FULL_SEQ_KINDS for k in cfg.layer_kinds)
+
+
+def _drop_free(model: Model) -> Model:
+    """MoE prefill runs drop-free (capacity = n_experts), mirroring the
+    decode path's ``full_capacity``: padded slots must not compete real
+    tokens out of expert capacity, and serving never drops tokens."""
+    cfg = model.cfg
+    if cfg.moe is not None and model.opts.capacity_factor < cfg.moe.n_experts:
+        opts = dataclasses.replace(model.opts, capacity_factor=float(cfg.moe.n_experts))
+        return dataclasses.replace(model, opts=opts)
+    return model
+
+
+def prefill_full_seq(model: Model, params, tokens: jax.Array, lengths: jax.Array,
+                     max_len: int, vision_embeds: Optional[jax.Array] = None):
+    """One parallel prefill over the packed grid.  Returns (last_logits, states)."""
+    model = _drop_free(model)
+    batch = {"tokens": tokens}
+    if vision_embeds is not None:
+        batch["vision_embeds"] = vision_embeds
+    logits, states = model.prefill(params, batch, max_len=max_len)
+    b = tokens.shape[0]
+    idx = (lengths - 1).reshape((b,) + (1,) * (logits.ndim - 1)).astype(jnp.int32)
+    last = jnp.take_along_axis(logits, jnp.broadcast_to(idx, (b, 1) + logits.shape[2:]), axis=1)
+    return last, states
+
+
+def prefill_scan(model: Model, params, tokens: jax.Array, lengths: jax.Array,
+                 max_len: int):
+    """Fused token-by-token prefill with per-slot masked state updates."""
+    cfg = model.cfg
+    b = tokens.shape[0]
+    s = tokens.shape[-1]
+    states0 = model.init_decode_state(b, max_len)
+    toks_t = jnp.moveaxis(tokens, -1, 0)[..., None]  # [S, B, 1] | [S, B, C, 1]
+    v = cfg.vocab
+    last0 = jnp.zeros((b, 1, cfg.n_codebooks, v) if cfg.n_codebooks else (b, 1, v), jnp.float32)
+
+    def step(carry, xs):
+        states, last = carry
+        t, tok = xs
+        logits, new_states = model.decode(params, tok, states, t)
+        active = t < lengths
+        states = select_states(new_states, states, active)
+        is_last = (t == lengths - 1).reshape((b,) + (1,) * (logits.ndim - 1))
+        last = jnp.where(is_last, logits, last)
+        return (states, last), None
+
+    (states, last), _ = jax.lax.scan(
+        step, (states0, last0), (jnp.arange(s, dtype=jnp.int32), toks_t)
+    )
+    return last, states
+
+
+# jitted per-model wrappers: memoized on the (hashable, frozen) Model so
+# all engine instances over the same model share one compile cache
+@functools.lru_cache(maxsize=64)
+def _full_seq_jit(model: Model):
+    def f(params, tokens, lengths, vision_embeds, max_len):
+        return prefill_full_seq(model, params, tokens, lengths, max_len, vision_embeds)
+
+    return jax.jit(f, static_argnames=("max_len",))
+
+
+@functools.lru_cache(maxsize=64)
+def _scan_jit(model: Model):
+    def f(params, tokens, lengths, max_len):
+        return prefill_scan(model, params, tokens, lengths, max_len)
+
+    return jax.jit(f, static_argnames=("max_len",))
+
+
+def packed_prefill(model: Model, params, tokens: jax.Array, lengths: jax.Array,
+                   max_len: int, vision_embeds: Optional[jax.Array] = None,
+                   lengths_static: Optional[List[int]] = None,
+                   force_scan: bool = False):
+    """Dispatch to the exact prefill strategy for this arch x length mix.
+
+    ``force_scan`` routes around the full-seq pass even when it would be
+    numerically safe — the engine uses it when a sliding-window ring is
+    larger than its pre-allocated ``max_len`` (the full-seq pass emits
+    window-sized rings; the scan path always matches ``init_decode_state``).
+    """
+    lens = lengths_static if lengths_static is not None else list(np.asarray(lengths))
+    if vision_embeds is None and "xattn" in model.cfg.layer_kinds:
+        # no frontend embeddings supplied: forward() cannot build the
+        # cross-attention KV.  Fall back to the scan path, which decodes
+        # against the zeroed static xattn cache — the behavior the
+        # pre-engine driver had for text-only runs of vision archs.
+        force_scan = True
+    if not force_scan and full_seq_packable(model.cfg, lens):
+        return _full_seq_jit(model)(params, tokens, lengths, vision_embeds, max_len=max_len)
+    if vision_embeds is not None:
+        raise NotImplementedError(
+            "mixed-length prefill with vision frontends needs a full-seq-safe stack"
+        )
+    return _scan_jit(model)(params, tokens, lengths, max_len=max_len)

@@ -1,0 +1,53 @@
+"""Token sampling for the serve engine: greedy, temperature, top-k.
+
+``SamplerConfig`` is a frozen (hashable) dataclass so it can ride through
+``jax.jit`` as a static argument — the whole fused decode loop specializes
+on the sampling strategy and compiles it into the scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """temperature == 0 -> greedy argmax; top_k == 0 -> full distribution."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        assert self.temperature >= 0.0, self.temperature
+        assert self.top_k >= 0, self.top_k
+
+
+GREEDY = SamplerConfig()
+
+
+def sample_logits(logits: jax.Array, sampler: SamplerConfig, key) -> jax.Array:
+    """Sample token ids from ``logits [..., V]`` -> ids ``[...]`` int32."""
+    if sampler.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / sampler.temperature
+    if sampler.top_k > 0 and sampler.top_k < lg.shape[-1]:
+        kth = jax.lax.top_k(lg, sampler.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def sample_next_token(logits: jax.Array, sampler: SamplerConfig, key,
+                      cfg: ArchConfig) -> jax.Array:
+    """Last-position logits -> the next input token, decode-shaped.
+
+    logits [B, S, V] (or [B, S, C, V] multi-codebook): takes position -1 and
+    returns [B, 1] (or [B, C, 1]) — exactly what ``Model.decode`` ingests.
+    """
+    ids = sample_logits(logits[:, -1], sampler, key)  # [B] or [B, C]
+    if cfg.n_codebooks:
+        return ids[..., None]  # [B, C, 1]
+    return ids[:, None]  # [B, 1]

@@ -1,0 +1,59 @@
+"""Axis-aware operations on the slotted decode-state pytree.
+
+``init_decode_state`` stacks states in two subtrees whose batch axis
+differs (see ``models.transformer``):
+
+* ``states["units"]`` — scan-stacked pattern units, leaves ``[n_units, B, ...]``
+  (batch axis 1);
+* ``states["rem"]``   — unrolled remainder layers, leaves ``[B, ...]``
+  (batch axis 0).
+
+The serve engine treats the batch axis as *slots*: requests are admitted
+into free slots and evicted at completion, so it needs batched select
+(masked state updates during packed prefill) and scatter (installing a new
+request's prefilled state into its slot) that know where the batch axis is.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _batched_where(new, old, active: jax.Array, batch_axis: int):
+    def sel(n, o):
+        shape = [1] * n.ndim
+        shape[batch_axis] = -1
+        return jnp.where(active.reshape(shape), n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
+def select_states(new: Dict[str, Any], old: Dict[str, Any], active: jax.Array):
+    """Per-slot select: take ``new`` where ``active [B]`` else keep ``old``."""
+    out: Dict[str, Any] = {}
+    if "units" in new:
+        out["units"] = _batched_where(new["units"], old["units"], active, 1)
+    if "rem" in new:
+        out["rem"] = _batched_where(new["rem"], old["rem"], active, 0)
+    return out
+
+
+def scatter_states(big: Dict[str, Any], small: Dict[str, Any], slot_ids: jax.Array):
+    """Install ``small`` (batch k) into ``big`` (batch B) at ``slot_ids [k]``.
+
+    ``.at[].set`` casts the update to the target leaf dtype, so prefill
+    states (model dtype) land in the engine's cache dtype — the same cast
+    the decode path applies on every KV write.
+    """
+    out: Dict[str, Any] = {}
+    if "units" in big:
+        out["units"] = jax.tree.map(
+            lambda b, s: b.at[:, slot_ids].set(s.astype(b.dtype)), big["units"], small["units"]
+        )
+    if "rem" in big:
+        out["rem"] = jax.tree.map(
+            lambda b, s: b.at[slot_ids].set(s.astype(b.dtype)), big["rem"], small["rem"]
+        )
+    return out

@@ -1,0 +1,61 @@
+"""``hypothesis`` with a deterministic fallback shim.
+
+The property tests declare ``hypothesis`` in pyproject.toml, but hermetic
+test environments may not have it installed.  When the real library is
+available it is used unchanged; otherwise this module provides the tiny
+subset the suite needs (``given``/``settings`` and the ``integers`` /
+``sampled_from`` / ``lists`` strategies) backed by a seeded PRNG, so the
+property tests still execute instead of failing collection.
+"""
+try:  # pragma: no cover - prefer the real thing
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ImportError:
+    import functools
+    import random
+
+    _SEED = 0xA57A  # deterministic: same examples every run
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 10
+            return _Strategy(
+                lambda r: [elem.draw(r) for _ in range(r.randint(min_size, hi))]
+            )
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(_SEED)
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in strats]
+                    fn(*args, *drawn, **kwargs)
+
+            # hide the wrapped signature: pytest must not mistake the
+            # drawn parameters for fixtures
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.bitstream import (
     LFSR_ORDER, N_WORDS, STREAM_LEN, encode, encode_signed, pack_bits,

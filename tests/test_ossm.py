@@ -11,7 +11,7 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.ossm import ossm_expected, ossm_multiply, sc_dot, sc_matmul_value
 from repro.core.quant import STREAM_LEN, quantize

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.quant import (
     MAG_MAX, STREAM_LEN, Calibrator, QTensor, fake_quant, int8_matmul_exact, quantize,

@@ -1,0 +1,87 @@
+"""``launch.serve.generate`` edge cases kept by the engine refactor.
+
+The refactor replaced the per-step dispatch loop with packed prefill +
+fused scan; these pin the behaviors the old driver guaranteed:
+
+* ``gen_len=0`` returns the prompts untouched;
+* multi-codebook (MusicGen) token grids keep their [B, C, S] shape through
+  prefill, sampling, and feed-back;
+* output layout is prompt ++ generated along the last axis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.launch.serve import generate
+from repro.models.model import Model
+from repro.models.transformer import ModelOptions
+
+
+@pytest.fixture(scope="module")
+def stablelm():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = Model(cfg, ModelOptions())
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def musicgen():
+    cfg = get_arch("musicgen-large").reduced()
+    model = Model(cfg, ModelOptions())
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_gen_len_zero_returns_prompts(stablelm, key):
+    model, params = stablelm
+    prompts = jax.random.randint(key, (2, 5), 0, model.cfg.vocab, jnp.int32)
+    toks, tps = generate(model, params, prompts, gen_len=0, max_len=16)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(prompts))
+    assert tps == 0.0
+
+
+def test_gen_len_one_single_prefill_token(stablelm, key):
+    model, params = stablelm
+    prompts = jax.random.randint(key, (2, 5), 0, model.cfg.vocab, jnp.int32)
+    toks, _ = generate(model, params, prompts, gen_len=1, max_len=16)
+    assert toks.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(toks[:, :5]), np.asarray(prompts))
+
+
+def test_codebook_token_shapes(musicgen, key):
+    model, params = musicgen
+    cfg = model.cfg
+    b, s0, gen = 2, 4, 5
+    prompts = jax.random.randint(key, (b, cfg.n_codebooks, s0), 0, cfg.vocab, jnp.int32)
+    toks, _ = generate(model, params, prompts, gen_len=gen, max_len=s0 + gen + 1)
+    assert toks.shape == (b, cfg.n_codebooks, s0 + gen)
+    np.testing.assert_array_equal(np.asarray(toks[..., :s0]), np.asarray(prompts))
+    assert int(jnp.min(toks)) >= 0 and int(jnp.max(toks)) < cfg.vocab
+
+
+def test_codebook_gen_len_zero(musicgen, key):
+    model, params = musicgen
+    cfg = model.cfg
+    prompts = jax.random.randint(key, (1, cfg.n_codebooks, 3), 0, cfg.vocab, jnp.int32)
+    toks, _ = generate(model, params, prompts, gen_len=0, max_len=8)
+    assert toks.shape == (1, cfg.n_codebooks, 3)
+
+
+def test_generate_matches_engine_greedy(stablelm, key):
+    """The thin generate() wrapper and the engine agree token-for-token."""
+    import dataclasses
+
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg = dataclasses.replace(get_arch("stablelm-1.6b").reduced(), dtype="float32")
+    model = Model(cfg, ModelOptions())
+    params = model.init(key)
+    prompts = jax.random.randint(key, (3, 6), 0, cfg.vocab, jnp.int32)
+    toks, _ = generate(model, params, prompts, gen_len=7, max_len=20)
+    eng = ServeEngine(model, params, ServeConfig(max_slots=3, max_len=20))
+    outs = eng.generate_batch([np.asarray(p) for p in prompts], 7)
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(toks[i, 6:]), o.tokens)

@@ -13,8 +13,17 @@ from repro.models.transformer import ModelOptions
 from repro.configs.base import SHAPES
 from repro.parallel.sharding import batch_specs, param_specs, state_specs
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _mesh(*pairs):
+    """AbstractMesh across jax versions: <=0.5 takes ((name, size), ...)
+    pairs; newer jax takes (axis_sizes, axis_names)."""
+    try:
+        return AbstractMesh(tuple(pairs))
+    except TypeError:
+        return AbstractMesh(tuple(s for _, s in pairs), tuple(n for n, _ in pairs))
+
+
+MESH = _mesh(("data", 16), ("model", 16))
+MESH3 = _mesh(("pod", 2), ("data", 16), ("model", 16))
 
 
 def _spec_of(sharding):
