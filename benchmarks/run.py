@@ -3,7 +3,9 @@
   PYTHONPATH=src python -m benchmarks.run [--only accuracy,speedup,...]
 
 Writes machine-readable results to artifacts/bench/<name>.json alongside the
-printed CSV-ish lines.
+printed CSV-ish lines, plus ``BENCH_<name>.json`` files at the repo root
+(and a ``BENCH_summary.json`` index) so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
@@ -11,6 +13,8 @@ import argparse
 import json
 import os
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 from benchmarks import (
     accuracy, energy_breakdown, energy_comparison, pairing_ablation, roofline,
@@ -38,6 +42,7 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     only = [s for s in args.only.split(",") if s]
     failures = []
+    ran = []
     for name, fn in SECTIONS.items():
         if only and name not in only:
             continue
@@ -45,8 +50,11 @@ def main():
         t0 = time.time()
         try:
             result = fn()
-            with open(os.path.join(args.out, name + ".json"), "w") as f:
-                json.dump(result, f, indent=2, default=float)
+            for path in (os.path.join(args.out, name + ".json"),
+                         os.path.join(REPO_ROOT, f"BENCH_{name}.json")):
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=2, default=float)
+            ran.append(name)
             if isinstance(result, dict) and result.get("claim_pass") is False:
                 failures.append(name)
         except Exception as e:  # noqa: BLE001
@@ -55,6 +63,23 @@ def main():
         print(f"({name}: {time.time() - t0:.1f}s)", flush=True)
     print("\n===== summary =====")
     print("benchmarks,failures," + (";".join(failures) if failures else "none"))
+    # merge into the existing index so `--only` runs don't erase the other
+    # sections' entries from the cross-PR trajectory
+    summary_path = os.path.join(REPO_ROOT, "BENCH_summary.json")
+    sections: dict = {}
+    if os.path.exists(summary_path):
+        try:
+            with open(summary_path) as f:
+                sections = json.load(f).get("sections", {})
+        except (json.JSONDecodeError, AttributeError):
+            sections = {}
+    now = time.time()
+    for name in ran:
+        sections[name] = {"unix_time": now, "failed": name in failures}
+    for name in failures:
+        sections.setdefault(name, {"unix_time": now, "failed": True})
+    with open(summary_path, "w") as f:
+        json.dump({"sections": sections, "last_failures": failures}, f, indent=2)
     raise SystemExit(1 if failures else 0)
 
 

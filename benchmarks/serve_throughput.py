@@ -12,13 +12,20 @@ decode tok/s for:
 
 Claim under test (ISSUE 1): fused >= 2x unfused at batch 8.
 
+Always writes machine-readable results to ``BENCH_serve_throughput.json``
+at the repo root (the cross-PR perf trajectory); ``--json`` adds an extra
+copy wherever you want it.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 import jax
 import jax.numpy as jnp
@@ -128,13 +135,16 @@ def run(log=print):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--json", default="", help="write results to this path")
+    ap.add_argument("--json", default="", help="extra copy of the results")
     args = ap.parse_args(argv)
     out = run()
+    paths = [os.path.join(REPO_ROOT, "BENCH_serve_throughput.json")]
     if args.json:
-        with open(args.json, "w") as f:
+        paths.append(args.json)
+    for path in paths:
+        with open(path, "w") as f:
             json.dump(out, f, indent=2)
-        print(f"wrote {args.json}")
+        print(f"wrote {path}")
     return out
 
 

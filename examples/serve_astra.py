@@ -4,7 +4,10 @@ Drives the continuous-batching serve engine (``repro.serve``) with a mixed
 prompt-length request stream — short and long prompts share one running
 batch, joining and leaving at chunk granularity — under the ASTRA int8
 expectation mode, compares generations against the fp32 reference, and
-prints the modeled photonic hardware cost per request.
+prints the modeled photonic hardware cost per request (attributed per
+GEMM site).  Any flag of ``repro.launch.serve`` works — notably
+``--plan mixed --calibrate`` for the per-site execution-plan path
+(int8 attention qk/pv + stochastic-stream projections, PTQ-calibrated).
 
   PYTHONPATH=src python examples/serve_astra.py [--arch stablelm-1.6b]
 """

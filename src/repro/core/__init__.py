@@ -11,14 +11,25 @@ Layers (bottom-up):
   simulator  — whole-model rollup (Fig. 5, per-model latency/energy)
   baselines  — CPU/GPU/TPU/FPGA/TransPIM/LT/TRON/SCONNA models (Fig. 6)
   astra_layer— exact | int8 | sc execution modes for the model zoo
+  plan       — per-site ExecutionPlan (site registry, glob rules, PTQ
+               calibration) shared by execution and the simulator
 """
 from repro.core.quant import QTensor, quantize, fake_quant, int8_matmul_exact, MAG_MAX, STREAM_LEN
-from repro.core.astra_layer import ComputeConfig, astra_matmul, EXACT, INT8, SC
+from repro.core.astra_layer import (
+    BoundSite, ComputeConfig, astra_batched_matmul, astra_matmul, EXACT, INT8, SC,
+)
+from repro.core.plan import (
+    ExecutionPlan, PRESET_PLANS, SiteBinding, model_sites, site_class,
+    validate_site_registry,
+)
 from repro.core.energy import AstraChipConfig
 from repro.core.vdpe import VDPEConfig, sc_matmul
 
 __all__ = [
     "QTensor", "quantize", "fake_quant", "int8_matmul_exact", "MAG_MAX", "STREAM_LEN",
-    "ComputeConfig", "astra_matmul", "EXACT", "INT8", "SC",
+    "BoundSite", "ComputeConfig", "astra_batched_matmul", "astra_matmul",
+    "EXACT", "INT8", "SC",
+    "ExecutionPlan", "PRESET_PLANS", "SiteBinding", "model_sites", "site_class",
+    "validate_site_registry",
     "AstraChipConfig", "VDPEConfig", "sc_matmul",
 ]

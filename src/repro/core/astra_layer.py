@@ -1,6 +1,6 @@
 """ASTRA as a first-class execution mode for model matmuls.
 
-``astra_matmul(x, w, mode)`` is the single entry point the model zoo uses
+``astra_matmul(x, w, cc)`` is the single entry point the model zoo uses
 for every GEMM, so the whole framework can switch between:
 
 * ``exact``  — bf16/f32 reference (training, dry-runs, baselines),
@@ -13,12 +13,20 @@ for every GEMM, so the whole framework can switch between:
   ~STREAM_LEN x the bytes of int8 — a validation mode, like the paper's own
   simulator.
 
-Modes are threaded through the models via :class:`ComputeConfig`.
+Modes are threaded through the models per GEMM *site*: ``cc`` may be a
+plain :class:`ComputeConfig` (uniform behavior, the legacy API) or a
+:class:`BoundSite` — a named GEMM site bound to an
+:class:`~repro.core.plan.ExecutionPlan` that resolves it to a per-site
+``ComputeConfig`` (and feeds the calibration observer during
+``plan.calibrate``).  Site naming matches the architecture simulator's op
+graph (``L3.attn.qk``, ``L0.rglru.in_proj``, ``lm_head``, ...) so executed
+GEMMs and modeled ops share one registry — see ``repro.core.plan``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +45,10 @@ class ComputeConfig:
     act_scale: Optional[float] = None  # static activation scale (PTQ-calibrated)
 
     def __post_init__(self):
-        assert self.mode in MODES, self.mode
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown compute mode {self.mode!r}; valid modes: {', '.join(MODES)}"
+            )
 
 
 EXACT = ComputeConfig("exact")
@@ -45,8 +56,72 @@ INT8 = ComputeConfig("int8")
 SC = ComputeConfig("sc")
 
 
-def astra_matmul(x: jax.Array, w: jax.Array, cc: ComputeConfig = EXACT) -> jax.Array:
-    """[..., K] @ [K, N] under the selected ASTRA execution mode."""
+@dataclasses.dataclass(frozen=True)
+class BoundSite:
+    """A named GEMM site (or a group of sites sharing one scanned trace)
+    bound to an ExecutionPlan.  ``astra_matmul`` accepts this wherever it
+    accepts a plain ComputeConfig; resolution happens at trace time.
+
+    ``sites`` holds every *concrete* site id this call stands for — the
+    scan-over-layers executes one trace for all pattern units, so a single
+    call site covers ``L0.attn.qk, L2.attn.qk, ...`` at once.  The plan
+    must resolve them identically (enforced by ``resolve_group``).
+    """
+
+    plan: object  # repro.core.plan.ExecutionPlan (duck-typed: no core->plan import)
+    sites: Tuple[str, ...]
+
+    def resolved(self) -> ComputeConfig:
+        return self.plan.resolve_group(self.sites)
+
+    @property
+    def observing(self) -> bool:
+        return getattr(self.plan, "_observer", None) is not None
+
+
+def resolve_cc(cc: Union[ComputeConfig, BoundSite]) -> ComputeConfig:
+    """Plain ComputeConfig for either form of ``cc`` (no observation)."""
+    return cc.resolved() if isinstance(cc, BoundSite) else cc
+
+
+def runs_exact(cc: Union[ComputeConfig, BoundSite]) -> bool:
+    """Whether this GEMM takes the plain exact fast path — i.e. neither
+    quantized nor tapped by a calibration observer."""
+    return resolve_cc(cc).mode == "exact" and not (
+        isinstance(cc, BoundSite) and cc.observing
+    )
+
+
+def _maybe_observe(cc: Union[ComputeConfig, BoundSite], x: jax.Array) -> None:
+    """Feed the activation absmax to the plan's calibration observer (if
+    any) — the single tap point shared by all astra matmul entry points."""
+    if isinstance(cc, BoundSite):
+        obs = getattr(cc.plan, "_observer", None)
+        if obs is not None:
+            amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+            jax.debug.callback(functools.partial(obs.record, cc.sites), amax)
+
+
+def astra_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cc: Union[ComputeConfig, BoundSite] = EXACT,
+    *,
+    site: Optional[str] = None,
+    plan=None,
+) -> jax.Array:
+    """[..., K] @ [K, N] under the selected ASTRA execution mode.
+
+    ``cc`` is either a uniform :class:`ComputeConfig` or a
+    :class:`BoundSite`; alternatively pass ``site=`` and ``plan=`` to bind
+    here (``astra_matmul(x, w, site="L0.attn.q_proj", plan=plan)``).
+    """
+    if plan is not None:
+        names = (site,) if isinstance(site, str) else tuple(site or ("<anon>",))
+        cc = BoundSite(plan, names)
+    if isinstance(cc, BoundSite):
+        _maybe_observe(cc, x)
+        cc = cc.resolved()
     if cc.mode == "exact":
         return jnp.matmul(x, w.astype(x.dtype))
     lead = x.shape[:-1]
@@ -73,3 +148,26 @@ def astra_matmul(x: jax.Array, w: jax.Array, cc: ComputeConfig = EXACT) -> jax.A
 
             out = sc_matmul_value(xq, wq, cc.x_gen, cc.w_gen)
     return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
+def astra_batched_matmul(x: jax.Array, w: jax.Array,
+                         cc: Union[ComputeConfig, BoundSite]) -> jax.Array:
+    """Batched GEMM with a *per-batch* second operand: ``[..., M, K] @
+    [..., K, N]`` with shared leading dims — the dynamic-tensor form the
+    attention qk/pv products and per-expert MoE GEMMs take.
+
+    Exact mode stays a plain einsum; quantized modes vmap ``astra_matmul``
+    over the flattened batch, which gives each batch element (e.g. each
+    attention head) its own dynamic quantization scales — matching how the
+    OSSM array streams both operands per tile.  Pallas kernels are 2-D; the
+    batched path always uses the jnp references.
+    """
+    if runs_exact(cc):
+        return jnp.matmul(x, w.astype(x.dtype))
+    cc_run = dataclasses.replace(resolve_cc(cc), use_pallas=False)
+    _maybe_observe(cc, x)
+    lead = x.shape[:-2]
+    xf = x.reshape((-1,) + x.shape[-2:])
+    wf = jnp.broadcast_to(w, lead + w.shape[-2:]).reshape((-1,) + w.shape[-2:])
+    out = jax.vmap(lambda a, b: astra_matmul(a, b, cc_run))(xf, wf)
+    return out.reshape(lead + out.shape[-2:])

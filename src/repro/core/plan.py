@@ -1,0 +1,334 @@
+"""Per-site ExecutionPlan: one op-naming scheme for model execution, PTQ
+calibration, and the architecture simulator.
+
+ASTRA treats *static-weight* projections and *dynamic-tensor* attention
+GEMMs (qk/pv) differently — the crosstalk-minimal OSSM organization and the
+"dynamically-operated" accelerator designs both hinge on this split.  The
+:class:`ExecutionPlan` makes that a first-class API: every GEMM the model
+executes has a stable site id matching the simulator's op-graph names
+(``L{layer}.{kind}.{op}``, plus ``lm_head``), and the plan maps sites to
+:class:`~repro.core.astra_layer.ComputeConfig` via ordered glob rules:
+
+    plan = ExecutionPlan.from_spec({"*.qk|*.pv": "int8", "*_proj": "sc",
+                                    "default": "exact"})
+
+Three cooperating pieces:
+
+* **Resolution** — ``plan.resolve(site)`` walks the rules (first match
+  wins; ``|`` separates glob alternatives) and falls back to ``default``.
+  The scan-over-layers executes ONE trace for all pattern units, so a call
+  site stands for a *group* of concrete layers (``L0.attn.qk, L2.attn.qk``,
+  ...); ``resolve_group`` enforces that a plan cannot split a scanned group
+  (layer-granular rules need unrolled/remainder layers).
+* **Calibration** — ``plan.calibrate(model, params, batch)`` runs the model
+  once in exact mode with per-site activation absmax observers
+  (``jax.debug.callback`` taps inside ``astra_matmul``) and bakes per-site
+  static ``act_scale`` values into the plan — replacing the single static
+  float that nothing ever computed.
+* **Registry cross-check** — ``model_sites(cfg)`` enumerates every executed
+  GEMM site; ``validate_site_registry(cfg)`` asserts each resolves to
+  exactly ONE op in ``core.simulator.model_ops``'s graph, so execution and
+  the latency/energy model can never drift apart silently.
+
+The legacy uniform API (``ModelOptions(cc=ComputeConfig("int8"))``) lowers
+to ``ExecutionPlan.uniform(cc)``: ``cc`` everywhere *except* the dynamic
+qk/pv sites and the MoE router/expert GEMMs, which stay exact —
+bit-identical to the pre-plan behavior, where only ``dense()`` weights
+were quantized.  Quantized attention and MoE are opt-in via explicit
+rules (e.g. the ``"mixed"`` preset, or ``{"*.expert_*": "int8"}``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.astra_layer import EXACT, INT8, MODES, SC, BoundSite, ComputeConfig
+from repro.core.quant import MAG_MAX
+
+# Dynamic-tensor GEMM sites: both operands produced at run time (q·k^T and
+# p·v).  ``uniform()`` pins these to exact; mlstm's decay-masked intra-chunk
+# products and slstm's recurrent matvecs are not plan-routed at all (they
+# run on the electronic side per DESIGN.md §Arch-applicability).
+DYNAMIC_SITES = "*.qk|*.pv"
+# MoE routing + grouped-dispatch expert GEMMs: the pre-plan code always ran
+# these as exact einsums (the global cc never reached them), so the legacy
+# shim pins them exact too; quantized MoE is opt-in via explicit rules.
+MOE_SITES = "*.router|*.expert_up|*.expert_down"
+
+
+def _match(pattern: str, site: str) -> bool:
+    return any(fnmatch.fnmatchcase(site, alt) for alt in pattern.split("|"))
+
+
+class _AbsMaxObserver:
+    """Python-side accumulator for per-site activation absmax (calibration)."""
+
+    def __init__(self):
+        self.amax: Dict[str, float] = {}
+
+    def record(self, sites: Tuple[str, ...], value) -> None:
+        v = float(np.max(np.abs(np.asarray(value))))
+        for s in sites:
+            if v > self.amax.get(s, 0.0):
+                self.amax[s] = v
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Ordered glob rules -> per-site ComputeConfig, plus calibrated scales.
+
+    Frozen and hashable (tuples only), so a ``Model`` carrying a plan stays
+    a valid ``lru_cache`` key for the serve engine's jit memoization.
+    """
+
+    rules: Tuple[Tuple[str, ComputeConfig], ...] = ()
+    default: ComputeConfig = EXACT
+    act_scales: Tuple[Tuple[str, float], ...] = ()  # site -> static act scale
+    name: str = ""
+    # Calibration tap.  compare=False keeps the plan hashable (observers
+    # aren't value-comparable) — which also means an observing plan
+    # compares EQUAL to its non-observing twin, so observing plans must
+    # never enter equality-keyed caches: ``calibrate`` only uses one for a
+    # single eager ``forward`` and discards it.  Don't hand one to the
+    # serve engine or anything jit-memoized per Model.
+    _observer: Optional[_AbsMaxObserver] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+
+    # ---------------------------------------------------------- resolution
+    def resolve(self, site: str) -> ComputeConfig:
+        """ComputeConfig for one concrete site (first matching rule wins)."""
+        cc = next((cc for pat, cc in self.rules if _match(pat, site)), self.default)
+        if cc.mode != "exact" and cc.act_scale is None:
+            for s, scale in self.act_scales:
+                if s == site:
+                    cc = dataclasses.replace(cc, act_scale=scale)
+                    break
+        return cc
+
+    def resolve_group(self, sites: Sequence[str]) -> ComputeConfig:
+        """Resolve a group of sites sharing one scanned trace.
+
+        All pattern units execute one trace under ``lax.scan``, so every
+        layer in the group *must* resolve to the same config; a plan that
+        splits the group is an error (per-layer plans need the unrolled
+        remainder layers, or an unrolled model).
+        """
+        ccs = [self.resolve(s) for s in sites]
+        first = ccs[0]
+        for s, cc in zip(sites[1:], ccs[1:]):
+            if cc != first:
+                raise ValueError(
+                    f"plan {self.name or self.rules!r} resolves {sites[0]!r} -> "
+                    f"{first.mode} but {s!r} -> {cc.mode}; layers sharing a "
+                    "scanned trace must resolve identically (layer-granular "
+                    "rules only apply to unrolled/remainder layers)"
+                )
+        return first
+
+    def site(self, name: str) -> BoundSite:
+        return BoundSite(self, (name,))
+
+    def binding(self, kind: str, layers: Sequence[int]) -> "SiteBinding":
+        return SiteBinding(self, tuple(f"L{li}.{kind}" for li in layers))
+
+    # --------------------------------------------------------- construction
+    @staticmethod
+    def uniform(cc: ComputeConfig) -> "ExecutionPlan":
+        """Legacy global-cc semantics: ``cc`` on every weight GEMM that the
+        pre-plan code quantized; dynamic qk/pv and the MoE router/expert
+        GEMMs stay exact (exactly what ``ModelOptions.cc`` did)."""
+        return ExecutionPlan(rules=((DYNAMIC_SITES, EXACT), (MOE_SITES, EXACT)),
+                             default=cc, name=f"uniform-{cc.mode}")
+
+    @staticmethod
+    def from_spec(spec: Union[str, Mapping, ComputeConfig, "ExecutionPlan"],
+                  name: str = "") -> "ExecutionPlan":
+        """Build a plan from a preset name, mode string, JSON string, or dict.
+
+        Dict keys are glob rules (``|`` = alternatives) applied in order;
+        the special key ``"default"`` sets the fallback.  Values are mode
+        strings or ComputeConfig kwarg dicts.
+        """
+        if isinstance(spec, ExecutionPlan):
+            return spec
+        if isinstance(spec, ComputeConfig):
+            return ExecutionPlan.uniform(spec)
+        if isinstance(spec, str):
+            s = spec.strip()
+            if s in PRESET_PLANS:
+                return PRESET_PLANS[s]
+            if s in MODES:
+                return ExecutionPlan.uniform(ComputeConfig(s))
+            if s.startswith("{"):
+                try:
+                    return ExecutionPlan.from_spec(
+                        json.loads(s), name=name or "<json>")
+                except json.JSONDecodeError as e:
+                    raise ValueError(f"invalid plan JSON: {e}") from e
+            raise ValueError(
+                f"unknown plan {spec!r}; valid presets: "
+                f"{', '.join(sorted(PRESET_PLANS))}; valid uniform modes: "
+                f"{', '.join(MODES)}; or pass JSON rules like "
+                '\'{"*.qk|*.pv": "int8", "*_proj": "sc", "default": "exact"}\''
+            )
+        if isinstance(spec, Mapping):
+            default = EXACT
+            rules: List[Tuple[str, ComputeConfig]] = []
+            for pat, val in spec.items():
+                cc = _as_cc(val)
+                if pat == "default":
+                    default = cc
+                else:
+                    rules.append((pat, cc))
+            return ExecutionPlan(tuple(rules), default, name=name)
+        raise TypeError(f"cannot build ExecutionPlan from {type(spec).__name__}")
+
+    # ---------------------------------------------------------- calibration
+    def calibrate(self, model, params, batch) -> "ExecutionPlan":
+        """One exact-mode forward with per-site absmax observers; returns a
+        plan with per-site static ``act_scale`` baked in.
+
+        ``model`` is a :class:`repro.models.model.Model`; ``batch`` is the
+        usual ``{"tokens": [B, S], ...}`` dict (or a bare token array).
+        Layers sharing a scanned trace share one observer tap, so their
+        scale is the max over the group — exactly the granularity the plan
+        can express for them.
+        """
+        import jax
+
+        from repro.models.transformer import forward
+
+        obs = _AbsMaxObserver()
+        observe_plan = ExecutionPlan(name="calibrate", _observer=obs)
+        opts = dataclasses.replace(model.opts, plan=observe_plan, cc=None,
+                                   remat=False)  # remat would double-fire taps
+        tokens = batch["tokens"] if isinstance(batch, Mapping) else batch
+        vis = batch.get("vision_embeds") if isinstance(batch, Mapping) else None
+        logits, _, _ = forward(params, tokens, model.cfg, opts, vision_embeds=vis)
+        jax.block_until_ready(logits)
+        jax.effects_barrier()  # flush the debug callbacks
+        scales = tuple(sorted(
+            (site, (amax / MAG_MAX) if amax > 0 else 1.0)
+            for site, amax in obs.amax.items()
+        ))
+        return dataclasses.replace(self, act_scales=scales)
+
+
+def _as_cc(val: Union[str, Mapping, ComputeConfig]) -> ComputeConfig:
+    if isinstance(val, ComputeConfig):
+        return val
+    if isinstance(val, str):
+        return ComputeConfig(val)  # raises with the valid-mode list
+    if isinstance(val, Mapping):
+        return ComputeConfig(**val)
+    raise TypeError(f"cannot build ComputeConfig from {type(val).__name__}")
+
+
+PRESET_PLANS: Dict[str, ExecutionPlan] = {
+    "exact": ExecutionPlan.uniform(EXACT),
+    "int8": ExecutionPlan.uniform(INT8),
+    "sc": ExecutionPlan.uniform(SC),
+    # the hybrid photonic-digital split: int8 expectation on the
+    # dynamic-tensor attention GEMMs, bit-true stochastic streams on the
+    # static-weight projections, exact everywhere else
+    "mixed": ExecutionPlan(
+        rules=((DYNAMIC_SITES, INT8), ("*_proj", SC)), default=EXACT, name="mixed"
+    ),
+}
+
+
+# ===================================================================== sites
+@dataclasses.dataclass(frozen=True)
+class SiteBinding:
+    """Site-scoped view of a plan for one block instance (or scanned group).
+
+    ``binding("qk")`` -> the :class:`BoundSite` covering
+    ``L{li}.{kind}.qk`` for every layer ``li`` the trace stands for.
+    """
+
+    plan: ExecutionPlan
+    prefixes: Tuple[str, ...]  # "L{li}.{kind}" per concrete layer
+
+    def __call__(self, op: str) -> BoundSite:
+        return BoundSite(self.plan, tuple(f"{p}.{op}" for p in self.prefixes))
+
+
+def as_binding(cc: Union[ComputeConfig, SiteBinding]) -> SiteBinding:
+    """Adapt a plain ComputeConfig (legacy direct calls into block fns) to
+    the binding interface: uniform plan over an anonymous block."""
+    if isinstance(cc, SiteBinding):
+        return cc
+    return SiteBinding(ExecutionPlan.uniform(cc), ("block",))
+
+
+# The GEMM ops each block kind executes, named to match the simulator op
+# graph (core.simulator._block_ops).  kv_proj covers both the wk and wv
+# dense calls (the simulator models them as one fused d -> 2*kv_dim GEMM);
+# "up" covers up+gate in gated MLPs the same way.
+_ATTN_OPS = ("q_proj", "kv_proj", "qk", "pv", "o_proj")
+_BLOCK_GEMMS: Dict[str, Tuple[str, ...]] = {
+    "attn": _ATTN_OPS,
+    "local": _ATTN_OPS,
+    "xattn": _ATTN_OPS,
+    "rglru": ("in_proj", "gates", "out_proj"),
+    "mlstm": ("up_proj", "qkv", "gates", "down_proj"),
+    "slstm": ("gates_in", "up", "down"),
+}
+
+
+def block_site_ops(cfg: ArchConfig, kind: str) -> Tuple[str, ...]:
+    ops = list(_BLOCK_GEMMS[kind])
+    has_mlp = kind in ("attn", "local", "xattn", "rglru") and (
+        cfg.d_ff > 0 or cfg.moe is not None
+    )
+    if has_mlp:
+        ops += ["router", "expert_up", "expert_down"] if cfg.moe is not None else ["up", "down"]
+    return tuple(ops)
+
+
+def model_sites(cfg: ArchConfig) -> Tuple[str, ...]:
+    """Every GEMM site the model executes, in layer order, plus lm_head."""
+    sites = [
+        f"L{li}.{kind}.{op}"
+        for li, kind in enumerate(cfg.layer_kinds)
+        for op in block_site_ops(cfg, kind)
+    ]
+    sites.append("lm_head")
+    return tuple(sites)
+
+
+def site_class(op_name: str) -> str:
+    """Aggregation key for per-site accounting: strip the layer index
+    (``L3.attn.qk`` -> ``attn.qk``); non-layer ops pass through."""
+    if op_name.startswith("L") and "." in op_name:
+        head, rest = op_name.split(".", 1)
+        if head[1:].isdigit():
+            return rest
+    return op_name
+
+
+def validate_site_registry(cfg: ArchConfig, seq: int = 8) -> None:
+    """Cross-check: every executed GEMM site resolves to exactly one
+    simulator op-graph name.  Raises with the offending sites otherwise.
+
+    (The converse need not hold: the simulator also models ops the zoo
+    keeps on the electronic side — mlstm intra-chunk products, ViT patch
+    embedding — and accounts them without a plan-routed execution site.)
+    """
+    from collections import Counter
+
+    from repro.core.simulator import model_ops
+
+    mm, _ = model_ops(cfg, seq=seq, batch=1)
+    counts = Counter(op.name for op in mm)
+    bad = {s: counts.get(s, 0) for s in model_sites(cfg) if counts.get(s, 0) != 1}
+    if bad:
+        raise AssertionError(
+            f"{cfg.name}: executed GEMM sites without a 1:1 simulator op: {bad}"
+        )

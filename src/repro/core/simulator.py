@@ -80,6 +80,9 @@ def _block_ops(cfg: ArchConfig, kind: str, b: int, s: int, li: int, causal: bool
     elif kind == "rglru":
         r = cfg.d_rnn
         mm.append(MatmulOp(f"{name}.in_proj", t, d, 2 * r))
+        # RG-LRU recurrence+input gates (W_a, W_x): r -> r GEMMs the model
+        # actually executes (site registry cross-check keeps this in sync)
+        mm.append(MatmulOp(f"{name}.gates", t, r, 2 * r))
         mm.append(MatmulOp(f"{name}.out_proj", t, r, d))
         # conv1d + RG-LRU recurrence: elementwise, electronic (DESIGN.md)
         ew.append(ElementwiseOp(f"{name}.conv", t * r * 2 * cfg.conv_width))
@@ -91,7 +94,10 @@ def _block_ops(cfg: ArchConfig, kind: str, b: int, s: int, li: int, causal: bool
         e = 2 * d
         hd = e // max(cfg.n_heads, 1)
         mm.append(MatmulOp(f"{name}.up_proj", t, d, 2 * e))
-        mm.append(MatmulOp(f"{name}.qkv", t, e, 3 * e // 2))
+        # three e -> e projections (w_q, w_k, w_v), as the model executes
+        mm.append(MatmulOp(f"{name}.qkv", t, e, 3 * e))
+        # per-head input/forget gate projections (w_if)
+        mm.append(MatmulOp(f"{name}.gates", t, e, 2 * cfg.n_heads))
         # chunkwise matrix-memory: intra-chunk attention-like products
         chunk = min(128, s)
         n_chunks = max(1, s // chunk)
@@ -102,7 +108,10 @@ def _block_ops(cfg: ArchConfig, kind: str, b: int, s: int, li: int, causal: bool
     elif kind == "slstm":
         h = d
         mm.append(MatmulOp(f"{name}.gates_in", t, d, 4 * h))
-        mm.append(MatmulOp(f"{name}.out", t, h, 2 * d))
+        # post-cell GLU FFN (4/3 expansion), matching the executed block
+        f_up = int(d * 4 / 3)
+        mm.append(MatmulOp(f"{name}.up", t, h, 2 * f_up))
+        mm.append(MatmulOp(f"{name}.down", t, f_up, d))
         # sequential scalar recurrence + recurrent matvecs: electronic
         ew.append(ElementwiseOp(f"{name}.recurrence", t * h * 10 + t * 4 * h * h // max(cfg.n_heads, 1) // 64))
     return mm, ew

@@ -11,11 +11,21 @@ the three ASTRA numeric modes:
   int8  — ASTRA expectation path    (deployable quantized fast path)
   sc    — bit-true 128-bit streams  (the paper's stochastic arithmetic)
 
+Execution modes are selected per GEMM site via ``--plan`` (preset name,
+uniform mode, or JSON glob rules over the shared execution/simulator site
+registry); ``--mode`` remains as the uniform shorthand.  ``--calibrate``
+runs a PTQ calibration pass (per-site activation scales) on a synthetic
+batch before serving.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
       --batch 4 --prompt-len 32 --gen 16 --mode int8 --compare-exact
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
       --prompt-mix 16,32,64 --batch 6 --gen 16 --temperature 0.8 --top-k 40
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+      --plan mixed --calibrate --batch 4 --gen 8
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+      --plan '{"*.qk|*.pv": "int8", "*_proj": "sc", "default": "exact"}'
 """
 from __future__ import annotations
 
@@ -27,8 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.astra_layer import ComputeConfig
+from repro.core.astra_layer import MODES
 from repro.core.energy import AstraChipConfig
+from repro.core.plan import PRESET_PLANS, ExecutionPlan
 from repro.models.model import Model
 from repro.models.transformer import ModelOptions
 from repro.serve import (
@@ -110,6 +121,19 @@ def _run_engine(model, params, prompts, args, sampler):
     return outs, sum(o.gen_len for o in outs) / dt
 
 
+def _parse_plan(ap: argparse.ArgumentParser, spec: str) -> ExecutionPlan:
+    """Validate ``--plan`` at the CLI, not deep inside ComputeConfig."""
+    try:
+        return ExecutionPlan.from_spec(spec)
+    except (ValueError, TypeError) as e:
+        ap.error(
+            f"--plan: {e}\n  presets: {', '.join(sorted(PRESET_PLANS))}\n"
+            f"  uniform modes: {', '.join(MODES)}\n"
+            "  or JSON rules, e.g. "
+            '\'{"*.qk|*.pv": "int8", "*_proj": "sc", "default": "exact"}\''
+        )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -120,7 +144,15 @@ def main(argv=None):
                     help="comma list of prompt lengths cycled over the batch, "
                          "e.g. 16,32,64 (continuous batching handles the mix)")
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mode", default="int8", choices=["exact", "int8", "sc"])
+    ap.add_argument("--mode", default="int8", choices=list(MODES),
+                    help="uniform execution mode (shorthand for --plan <mode>)")
+    ap.add_argument("--plan", default="",
+                    help="per-site execution plan: preset "
+                         f"({', '.join(sorted(PRESET_PLANS))}), uniform mode, "
+                         "or JSON glob rules; overrides --mode")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run a PTQ calibration pass (per-site activation "
+                         "scales) on a synthetic batch before serving")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--chunk-steps", type=int, default=8,
@@ -143,17 +175,37 @@ def main(argv=None):
     lengths = _prompt_lengths(args)
     prompts = _make_prompts(cfg, lengths, key)
 
-    model = Model(cfg, ModelOptions(cc=ComputeConfig(args.mode)))
+    plan = _parse_plan(ap, args.plan) if args.plan else ExecutionPlan.from_spec(args.mode)
+    plan_label = plan.name or args.plan or args.mode
+    model = Model(cfg, ModelOptions(plan=plan))
+    if args.calibrate:
+        from repro.serve.prefill import pack_prompts
+
+        cal_tokens, _ = pack_prompts(prompts, cfg)
+        model = model.calibrate(params, {"tokens": cal_tokens})
+        print(f"calibrated {len(model.plan.act_scales)} site activation scales")
     outs, tps = _run_engine(model, params, prompts, args, sampler)
-    print(f"[{args.mode}] {len(outs)} requests (prompt lens {sorted(set(lengths))}), "
+    print(f"[{plan_label}] {len(outs)} requests (prompt lens {sorted(set(lengths))}), "
           f"{args.gen} new tokens each: {tps:.1f} tok/s")
+    site_energy: dict = {}
     for o in outs:
         hw = o.hardware
         print(f"  req {o.request_id}: prompt {o.prompt.shape[-1]:>4} gen {o.gen_len:>3} | "
               f"ASTRA latency {hw.latency_s * 1e6:.3f} us, energy {hw.energy_j * 1e3:.3f} mJ, "
               f"{hw.energy_per_mac_j * 1e12:.3f} pJ/MAC")
+        for site, e in hw.energy_by_site:
+            site_energy[site] = site_energy.get(site, 0.0) + e
+    top = sorted(site_energy.items(), key=lambda kv: -kv[1])[:5]
+    total = sum(site_energy.values()) or 1.0
+    print("  energy by site (top 5): " + ", ".join(
+        f"{s} {e / total * 100:.1f}%" for s, e in top))
 
-    if args.compare_exact and args.mode != "exact":
+    # compare against exact iff the *effective* plan quantizes anything
+    # (--plan overrides --mode, so the gate must look at the plan)
+    from repro.core.plan import model_sites
+
+    all_exact = all(model.plan.resolve(s).mode == "exact" for s in model_sites(cfg))
+    if args.compare_exact and not all_exact:
         outs_ref, _ = _run_engine(base_model, params, prompts, args, sampler)
         agree = np.mean([
             np.mean(o.tokens == r.tokens) for o, r in zip(outs, outs_ref)

@@ -10,16 +10,27 @@ Three entry points per block:
 The softmax attention itself defaults to jnp einsum (XLA-native; gives the
 dry-run an honest FLOP/byte profile) and can be swapped for the Pallas
 flash kernel (``use_flash``) — both validated against each other in tests.
+
+GEMM sites: the projections are ``q_proj / kv_proj / o_proj`` (kv_proj
+covers both wk and wv, matching the simulator's fused KV op); the
+*dynamic-tensor* products are ``qk`` and ``pv``.  When the execution plan
+resolves qk/pv to a quantized mode they run through
+``astra_batched_matmul`` (per-head dynamic quantization — both operands
+streamed, as the OSSM array does); the flash kernel only covers exact
+qk/pv and is bypassed otherwise.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.core.astra_layer import (
+    BoundSite, ComputeConfig, EXACT, astra_batched_matmul, runs_exact,
+)
+from repro.core.plan import SiteBinding, as_binding
 from repro.models.layers import apply_rope, dense, dense_init
 from repro.parallel.sharding import shard_act
 
@@ -49,22 +60,51 @@ def _merge_heads(x: jax.Array) -> jax.Array:
     return x.transpose(0, 2, 1, 3).reshape(b, s, n * hd)
 
 
+def _dyn_exact(bound: Optional[BoundSite]) -> bool:
+    """Whether a dynamic-GEMM site runs the plain exact einsum path."""
+    return bound is None or runs_exact(bound)
+
+
+def _qk_scores(qg: jax.Array, k: jax.Array, bound: Optional[BoundSite]) -> jax.Array:
+    """q·k^T per head group: [B,KV,G,Sq,hd] x [B,KV,Sk,hd] -> [B,KV,G,Sq,Sk]."""
+    if _dyn_exact(bound):
+        # keep operands in their storage dtype and accumulate in f32 via
+        # preferred_element_type: avoids materializing an f32 copy of the
+        # whole KV cache every decode step (2x cache bytes on the roofline)
+        return jnp.einsum("bkgqd,bkld->bkgql", qg, k.astype(qg.dtype),
+                          preferred_element_type=jnp.float32)
+    b, kvh, g, sq, hd = qg.shape
+    x = qg.reshape(b, kvh, g * sq, hd)
+    w = jnp.swapaxes(k, -1, -2).astype(qg.dtype)  # [B,KV,hd,Sk]
+    out = astra_batched_matmul(x, w, bound)
+    return out.reshape(b, kvh, g, sq, -1).astype(jnp.float32)
+
+
+def _pv_out(p: jax.Array, v: jax.Array, bound: Optional[BoundSite]) -> jax.Array:
+    """probs·v per head group: [B,KV,G,Sq,Sk] x [B,KV,Sk,hd] -> [B,KV,G,Sq,hd]."""
+    if _dyn_exact(bound):
+        return jnp.einsum("bkgql,bkld->bkgqd", p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+    b, kvh, g, sq, sk = p.shape
+    x = p.reshape(b, kvh, g * sq, sk).astype(v.dtype)
+    out = astra_batched_matmul(x, v, bound)
+    return out.reshape(b, kvh, g, sq, -1).astype(jnp.float32)
+
+
 def _sdpa(q, k, v, *, causal: bool, window: int, q_offset: int | jax.Array = 0,
-          kv_len: Optional[jax.Array] = None, softcap: float = 0.0) -> jax.Array:
+          kv_len: Optional[jax.Array] = None, softcap: float = 0.0,
+          qk: Optional[BoundSite] = None, pv: Optional[BoundSite] = None) -> jax.Array:
     """jnp attention. q [B,H,Sq,hd], k/v [B,KV,Sk,hd]; GQA via head groups.
 
     ``kv_len`` may be a scalar or a per-batch ``[B]`` vector (the serve
     engine's continuous batching runs slots at different positions).
+    ``qk``/``pv`` are the plan-bound dynamic-GEMM sites (None = exact).
     """
     b, h, sq, hd = q.shape
     kvh, sk = k.shape[1], k.shape[2]
     g = h // kvh
     qg = q.reshape(b, kvh, g, sq, hd)
-    # keep operands in their storage dtype and accumulate in f32 via
-    # preferred_element_type: avoids materializing an f32 copy of the whole
-    # KV cache every decode step (2x cache bytes on the memory roofline)
-    s = jnp.einsum("bkgqd,bkld->bkgql", qg, k.astype(qg.dtype),
-                   preferred_element_type=jnp.float32)
+    s = _qk_scores(qg, k, qk)
     s = s * (hd ** -0.5)
     if softcap > 0:
         s = jnp.tanh(s / softcap) * softcap
@@ -83,8 +123,7 @@ def _sdpa(q, k, v, *, causal: bool, window: int, q_offset: int | jax.Array = 0,
             mask &= k_pos < kv_len
         s = jnp.where(mask[None, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgql,bkld->bkgqd", p.astype(v.dtype), v,
-                   preferred_element_type=jnp.float32)
+    o = _pv_out(p, v, pv)
     return o.reshape(b, h, sq, hd).astype(q.dtype)
 
 
@@ -94,7 +133,7 @@ def attn_seq(
     cfg: ArchConfig,
     *,
     kind: str,  # attn | local | xattn
-    cc: ComputeConfig = EXACT,
+    sites: Union[ComputeConfig, SiteBinding] = EXACT,
     use_flash: bool = False,
     positions: Optional[jax.Array] = None,
     kv_src: Optional[jax.Array] = None,  # cross-attn memory [B, T, D]
@@ -102,12 +141,13 @@ def attn_seq(
     max_len: Optional[int] = None,  # pre-allocated cache length for serving
 ) -> Tuple[jax.Array, Optional[KVCache]]:
     b, s, d = x.shape
+    sites = as_binding(sites)
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     src = kv_src if kind == "xattn" else x
-    q = _split_heads(dense(p["wq"], x, cc), cfg.n_heads, cfg.head_dim)
-    k = _split_heads(dense(p["wk"], src, cc), cfg.n_kv_heads, cfg.head_dim)
-    v = _split_heads(dense(p["wv"], src, cc), cfg.n_kv_heads, cfg.head_dim)
+    q = _split_heads(dense(p["wq"], x, sites("q_proj")), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(dense(p["wk"], src, sites("kv_proj")), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(p["wv"], src, sites("kv_proj")), cfg.n_kv_heads, cfg.head_dim)
     q = shard_act(q, ("batch", "heads", None, None))
     k = shard_act(k, ("batch", "heads", None, None))
     v = shard_act(v, ("batch", "heads", None, None))
@@ -116,14 +156,18 @@ def attn_seq(
         k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
     causal = kind != "xattn"
     window = cfg.window if kind == "local" else 0
-    if use_flash and kind != "xattn":
+    qk_b, pv_b = sites("qk"), sites("pv")
+    # the flash kernel implements exact qk/pv only; quantized dynamic GEMMs
+    # take the astra-batched path inside _sdpa
+    if use_flash and kind != "xattn" and _dyn_exact(qk_b) and _dyn_exact(pv_b):
         from repro.kernels.flash_attention import flash_attention
 
         o = flash_attention(q, k, v, causal=causal, window=window)
     else:
-        o = _sdpa(q, k, v, causal=causal, window=window, softcap=cfg.logit_softcap)
+        o = _sdpa(q, k, v, causal=causal, window=window, softcap=cfg.logit_softcap,
+                  qk=qk_b, pv=pv_b)
     o = shard_act(o, ("batch", "heads", None, None))
-    out = shard_act(dense(p["wo"], _merge_heads(o), cc), ("batch", None, None))
+    out = shard_act(dense(p["wo"], _merge_heads(o), sites("o_proj")), ("batch", None, None))
     cache = None
     if return_cache:
         cache = _make_cache(k, v, kind, cfg, s, max_len)
@@ -177,22 +221,25 @@ def attn_decode(
     cfg: ArchConfig,
     *,
     kind: str,
-    cc: ComputeConfig = EXACT,
+    sites: Union[ComputeConfig, SiteBinding] = EXACT,
 ) -> Tuple[jax.Array, KVCache]:
     b = x.shape[0]
+    sites = as_binding(sites)
     pos = jnp.asarray(pos, jnp.int32)
     per_slot = pos.ndim == 1  # continuous batching: each slot at its own pos
     q = shard_act(
-        _split_heads(dense(p["wq"], x, cc), cfg.n_heads, cfg.head_dim),
+        _split_heads(dense(p["wq"], x, sites("q_proj")), cfg.n_heads, cfg.head_dim),
         ("batch", "heads", None, None),
     )
     posb = pos[:, None] if per_slot else jnp.broadcast_to(pos[None, None], (b, 1))
+    qk_b, pv_b = sites("qk"), sites("pv")
     if kind == "xattn":
         # static frontend KV; no rope, full visibility
-        o = _sdpa(q, cache.k, cache.v, causal=False, window=0, softcap=cfg.logit_softcap)
-        return dense(p["wo"], _merge_heads(o), cc), cache
-    k_new = _split_heads(dense(p["wk"], x, cc), cfg.n_kv_heads, cfg.head_dim)
-    v_new = _split_heads(dense(p["wv"], x, cc), cfg.n_kv_heads, cfg.head_dim)
+        o = _sdpa(q, cache.k, cache.v, causal=False, window=0, softcap=cfg.logit_softcap,
+                  qk=qk_b, pv=pv_b)
+        return dense(p["wo"], _merge_heads(o), sites("o_proj")), cache
+    k_new = _split_heads(dense(p["wk"], x, sites("kv_proj")), cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(dense(p["wv"], x, sites("kv_proj")), cfg.n_kv_heads, cfg.head_dim)
     q = apply_rope(q, posb, cfg.rope_pct, cfg.rope_theta)
     k_new = apply_rope(k_new, posb, cfg.rope_pct, cfg.rope_theta)
     s_cache = cache.k.shape[2]
@@ -210,8 +257,10 @@ def attn_decode(
     if kind == "local":
         # ring buffer: every resident entry is within the window; valid count
         kv_len = jnp.minimum(pos + 1, s_cache)
-        o = _sdpa(q, k, v, causal=False, window=0, kv_len=kv_len, softcap=cfg.logit_softcap)
+        o = _sdpa(q, k, v, causal=False, window=0, kv_len=kv_len, softcap=cfg.logit_softcap,
+                  qk=qk_b, pv=pv_b)
     else:
-        o = _sdpa(q, k, v, causal=False, window=0, kv_len=pos + 1, softcap=cfg.logit_softcap)
-    out = dense(p["wo"], _merge_heads(o), cc)
+        o = _sdpa(q, k, v, causal=False, window=0, kv_len=pos + 1, softcap=cfg.logit_softcap,
+                  qk=qk_b, pv=pv_b)
+    out = dense(p["wo"], _merge_heads(o), sites("o_proj"))
     return out, KVCache(k, v)

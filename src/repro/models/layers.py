@@ -1,20 +1,27 @@
 """Shared neural building blocks (pure JAX, functional params-as-pytrees).
 
 All GEMMs route through :func:`dense` -> ``core.astra_matmul`` so the whole
-zoo switches between exact / int8 / stochastic ASTRA execution modes.
-Parameters are plain nested dicts; leaf names drive the sharding rules in
-``repro.parallel.sharding`` (see that module's table).
+zoo switches between exact / int8 / stochastic ASTRA execution modes —
+per GEMM *site*: block-level functions take a
+:class:`~repro.core.plan.SiteBinding` (``sites("up")`` names the op in the
+shared execution/simulator registry) and still accept a plain
+``ComputeConfig`` for uniform legacy behavior.  Parameters are plain nested
+dicts; leaf names drive the sharding rules in ``repro.parallel.sharding``
+(see that module's table).
 """
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.astra_layer import ComputeConfig, EXACT, astra_matmul
+from repro.core.astra_layer import BoundSite, ComputeConfig, EXACT, astra_matmul
+from repro.core.plan import SiteBinding, as_binding
+
+SiteOrCC = Union[ComputeConfig, BoundSite]
 
 
 def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: Optional[float] = None):
@@ -25,7 +32,7 @@ def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: Optional[f
     return p
 
 
-def dense(p, x: jax.Array, cc: ComputeConfig = EXACT) -> jax.Array:
+def dense(p, x: jax.Array, cc: SiteOrCC = EXACT) -> jax.Array:
     y = astra_matmul(x, p["w"], cc)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
@@ -84,18 +91,22 @@ def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None):
     return p
 
 
-def mlp_apply(p, x: jax.Array, cfg: ArchConfig, cc: ComputeConfig = EXACT) -> jax.Array:
+def mlp_apply(p, x: jax.Array, cfg: ArchConfig,
+              sites: Union[ComputeConfig, SiteBinding] = EXACT) -> jax.Array:
     from repro.parallel.sharding import shard_act
 
-    up = dense(p["up"], x, cc)
+    sites = as_binding(sites)
+    # the gate GEMM shares the "up" site: the simulator models gated MLPs
+    # as one fused d -> 2*d_ff up op
+    up = dense(p["up"], x, sites("up"))
     if "gate" in p:
-        g = dense(p["gate"], x, cc)
+        g = dense(p["gate"], x, sites("up"))
         act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
         h = act * up
     else:
         h = jax.nn.gelu(up)
     h = shard_act(h, ("batch", None, "ffn"))
-    return shard_act(dense(p["down"], h, cc), ("batch", None, None))
+    return shard_act(dense(p["down"], h, sites("down")), ("batch", None, None))
 
 
 # ----------------------------------------------------------------- embeddings
@@ -124,7 +135,7 @@ def head_init(key, cfg: ArchConfig):
     return {"w": w[0] if n_heads == 1 else w}
 
 
-def head_apply(p, emb_p, x: jax.Array, cfg: ArchConfig, cc: ComputeConfig = EXACT) -> jax.Array:
+def head_apply(p, emb_p, x: jax.Array, cfg: ArchConfig, cc: SiteOrCC = EXACT) -> jax.Array:
     """x [B, S, D] -> logits [B, S, V] (or [B, S, C, V])."""
     if cfg.tie_embeddings:
         w = emb_p["table"].T  # [D, V]

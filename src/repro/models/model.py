@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.plan import ExecutionPlan
 from repro.models.transformer import (
     ModelOptions, decode_step, forward, init_decode_state, init_params,
 )
@@ -36,6 +37,25 @@ def cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 0.0):
 class Model:
     cfg: ArchConfig
     opts: ModelOptions = ModelOptions()
+
+    # --------------------------------------------------------------- plan
+    @property
+    def plan(self) -> ExecutionPlan:
+        return self.opts.plan
+
+    def with_plan(self, plan) -> "Model":
+        """Same model under a different ExecutionPlan (any ``from_spec``
+        form: plan, preset/mode name, JSON rules, dict)."""
+        plan = ExecutionPlan.from_spec(plan)
+        return dataclasses.replace(
+            self, opts=dataclasses.replace(self.opts, plan=plan, cc=None)
+        )
+
+    def calibrate(self, params, batch) -> "Model":
+        """PTQ calibration pass: one exact-mode forward over ``batch`` with
+        per-site activation observers; returns the model with per-site
+        static ``act_scale`` baked into its plan."""
+        return self.with_plan(self.plan.calibrate(self, params, batch))
 
     # ------------------------------------------------------------- params
     def init(self, key) -> Dict[str, Any]:

@@ -12,13 +12,16 @@ x mean dispatch fraction x E).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.core.astra_layer import (
+    ComputeConfig, EXACT, astra_batched_matmul, astra_matmul,
+)
+from repro.core.plan import SiteBinding, as_binding
 from repro.models.layers import dense_init
 from repro.parallel.sharding import shard_act
 
@@ -45,7 +48,7 @@ def moe_apply(
     p,
     x: jax.Array,  # [B, S, D]
     cfg: ArchConfig,
-    cc: ComputeConfig = EXACT,
+    sites: Union[ComputeConfig, SiteBinding] = EXACT,
     capacity_factor: float = 1.25,
     full_capacity: bool = False,
     group_size: int = MOE_GROUP,
@@ -67,13 +70,14 @@ def moe_apply(
     """
     m = cfg.moe
     b, s, d = x.shape
+    sites = as_binding(sites)
     t = b * s
     g = min(group_size, t)
     while t % g:  # groups must tile the token stream exactly
         g -= 1
     n_groups = t // g
     xt = x.reshape(n_groups, g, d)
-    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"]["w"])
+    logits = astra_matmul(xt.astype(jnp.float32), p["router"]["w"], sites("router"))
     probs = jax.nn.softmax(logits, axis=-1)  # [G, g, E]
     gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)  # [G, g, k]
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
@@ -98,15 +102,19 @@ def moe_apply(
     expert_in = jnp.einsum("gtec,gtd->gecd", disp_te_c, xt)  # [G, E, C, D]
     expert_in = shard_act(expert_in, ("batch", "experts", None, None))
 
-    up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(xt.dtype))
+    # per-expert GEMMs: [G,E,C,D] x [E,D,F] with the expert axis batched —
+    # exact mode stays an einsum-equivalent matmul; quantized modes give
+    # each expert its own scales (astra_batched_matmul).  The gate shares
+    # the expert_up site (the simulator fuses gate+up into one 2*d_expert op).
+    up = astra_batched_matmul(expert_in, p["w_up"], sites("expert_up"))
     if "w_gate" in p:
-        gg = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"].astype(xt.dtype))
+        gg = astra_batched_matmul(expert_in, p["w_gate"], sites("expert_up"))
         act = jax.nn.silu(gg) if cfg.act == "swiglu" else jax.nn.gelu(gg)
         h = act * up
     else:
         h = jax.nn.gelu(up)
     expert_out = shard_act(
-        jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(xt.dtype)),
+        astra_batched_matmul(h, p["w_down"], sites("expert_down")),
         ("batch", "experts", None, None),
     )  # [G, E, C, D]
 

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.core.plan import SiteBinding, as_binding
 from repro.models.layers import dense, dense_init
 from repro.parallel.sharding import shard_act
 
@@ -51,10 +52,10 @@ def rglru_init(key, cfg: ArchConfig):
     }
 
 
-def _gates(p, y: jax.Array, cc: ComputeConfig):
+def _gates(p, y: jax.Array, sites: SiteBinding):
     """Returns (a, beta_x) with a = decay in (0,1), beta_x = scaled input."""
-    rt = jax.nn.sigmoid(dense(p["w_a"], y, cc).astype(jnp.float32))
-    it = jax.nn.sigmoid(dense(p["w_x"], y, cc).astype(jnp.float32))
+    rt = jax.nn.sigmoid(dense(p["w_a"], y, sites("gates")).astype(jnp.float32))
+    it = jax.nn.sigmoid(dense(p["w_x"], y, sites("gates")).astype(jnp.float32))
     log_a = -C_LRU * jax.nn.softplus(p["lam"]) * rt  # [B, S, r] (<0)
     a = jnp.exp(log_a)
     scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
@@ -74,16 +75,17 @@ def rglru_seq(
     p,
     x: jax.Array,  # [B, S, D]
     cfg: ArchConfig,
-    cc: ComputeConfig = EXACT,
+    sites: ComputeConfig | SiteBinding = EXACT,
     use_kernel: bool = False,
     return_state: bool = False,
 ) -> Tuple[jax.Array, RGLRUState | None]:
     b, s, _ = x.shape
     r = cfg.d_rnn
-    xz = shard_act(dense(p["w_in"], x, cc), ("batch", None, "rnn"))
+    sites = as_binding(sites)
+    xz = shard_act(dense(p["w_in"], x, sites("in_proj")), ("batch", None, "rnn"))
     y, gate = xz[..., :r], xz[..., r:]
     y = _conv_seq(p, y, cfg)
-    a, bx = _gates(p, y, cc)
+    a, bx = _gates(p, y, sites)
     if use_kernel:
         from repro.kernels.rglru_scan import rglru_scan
 
@@ -93,7 +95,7 @@ def rglru_seq(
 
         h = rglru_scan_ref(a, bx)
     out = h.astype(x.dtype) * jax.nn.gelu(gate)
-    out = dense(p["w_out"], out, cc)
+    out = dense(p["w_out"], out, sites("out_proj"))
     state = None
     if return_state:
         cw = cfg.conv_width
@@ -108,18 +110,19 @@ def rglru_decode(
     x: jax.Array,  # [B, 1, D]
     state: RGLRUState,
     cfg: ArchConfig,
-    cc: ComputeConfig = EXACT,
+    sites: ComputeConfig | SiteBinding = EXACT,
 ) -> Tuple[jax.Array, RGLRUState]:
     r = cfg.d_rnn
-    xz = dense(p["w_in"], x, cc)
+    sites = as_binding(sites)
+    xz = dense(p["w_in"], x, sites("in_proj"))
     y_new, gate = xz[..., :r], xz[..., r:]
     # conv over [state.conv ; y_new]
     hist = jnp.concatenate([state.conv, y_new.astype(jnp.float32)], axis=1)  # [B, cw, r]
     w = p["conv_w"]
     y = jnp.einsum("bcr,cr->br", hist, w)[:, None, :] + p["conv_b"]
-    a, bx = _gates(p, y.astype(x.dtype), cc)
+    a, bx = _gates(p, y.astype(x.dtype), sites)
     h = a[:, 0] * state.h + bx[:, 0]
     out = h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)
-    out = dense(p["w_out"], out, cc)
+    out = dense(p["w_out"], out, sites("out_proj"))
     new_state = RGLRUState(h, hist[:, 1:])
     return out, new_state

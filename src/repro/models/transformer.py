@@ -13,13 +13,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.core.plan import ExecutionPlan
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -32,12 +33,33 @@ from repro.models.layers import (
 
 @dataclasses.dataclass(frozen=True)
 class ModelOptions:
-    cc: ComputeConfig = EXACT
+    """Execution options.  GEMM modes are governed by ``plan`` (an
+    :class:`~repro.core.plan.ExecutionPlan`, or any ``from_spec`` form:
+    preset name, mode string, JSON rules, dict).
+
+    ``cc`` is the DEPRECATED one-release shim for the old global-mode API:
+    ``ModelOptions(cc=ComputeConfig("int8"))`` lowers to
+    ``ExecutionPlan.uniform(cc)`` (same numerics as before — weight GEMMs
+    quantized, dynamic qk/pv exact) and is then normalized to ``None`` so
+    equal plans hash/compare equal regardless of which spelling built them.
+    """
+
+    plan: Optional[Union[ExecutionPlan, str, dict, ComputeConfig]] = None
+    cc: Optional[ComputeConfig] = None  # DEPRECATED -> uniform plan
     attn_impl: str = "naive"  # naive | flash (Pallas, interpret on CPU)
     use_rglru_kernel: bool = False
     remat: bool = True
     capacity_factor: float = 1.25
     z_loss: float = 1e-4
+
+    def __post_init__(self):
+        plan = self.plan
+        if plan is None:
+            plan = ExecutionPlan.uniform(self.cc if self.cc is not None else EXACT)
+        elif not isinstance(plan, ExecutionPlan):
+            plan = ExecutionPlan.from_spec(plan)
+        object.__setattr__(self, "plan", plan)
+        object.__setattr__(self, "cc", None)  # normalized: plan is the truth
 
 
 # ------------------------------------------------------------------ blocks
@@ -63,58 +85,62 @@ def block_init(key, cfg: ArchConfig, kind: str):
 
 
 def block_apply_seq(
-    p, x, cfg: ArchConfig, kind: str, opts: ModelOptions,
+    p, x, cfg: ArchConfig, kind: str, opts: ModelOptions, layers: Tuple[int, ...],
     vision_embeds=None, return_state: bool = False, max_len: Optional[int] = None,
 ):
-    """Returns (x, state, aux)."""
-    cc = opts.cc
+    """Returns (x, state, aux).  ``layers`` holds the concrete layer
+    indices this trace stands for (one index for unrolled remainder
+    layers; every unit's index for a scanned pattern slot) — they form the
+    ``L{li}.{kind}.*`` site group the plan resolves."""
+    sites = opts.plan.binding(kind, layers)
     h = norm_apply(p["pre_norm"], x, cfg.norm, cfg.norm_eps)
     state = None
     if kind in ("attn", "local", "xattn"):
         out, cache = attn.attn_seq(
-            p["core"], h, cfg, kind=kind, cc=cc,
+            p["core"], h, cfg, kind=kind, sites=sites,
             use_flash=(opts.attn_impl == "flash"),
             kv_src=vision_embeds, return_cache=return_state, max_len=max_len,
         )
         state = cache
     elif kind == "rglru":
-        out, state = rglru_mod.rglru_seq(p["core"], h, cfg, cc, opts.use_rglru_kernel, return_state)
+        out, state = rglru_mod.rglru_seq(p["core"], h, cfg, sites, opts.use_rglru_kernel, return_state)
     elif kind == "mlstm":
-        out, state = xlstm_mod.mlstm_seq(p["core"], h, cfg, cc, return_state)
+        out, state = xlstm_mod.mlstm_seq(p["core"], h, cfg, sites, return_state)
     elif kind == "slstm":
-        out, state = xlstm_mod.slstm_seq(p["core"], h, cfg, cc, return_state)
+        out, state = xlstm_mod.slstm_seq(p["core"], h, cfg, sites, return_state)
     x = x + out
     aux = jnp.zeros((), jnp.float32)
     if _has_mlp(cfg, kind):
         h2 = norm_apply(p["post_norm"], x, cfg.norm, cfg.norm_eps)
         if cfg.moe is not None:
-            mo, aux = moe_mod.moe_apply(p["mlp"], h2, cfg, cc, opts.capacity_factor)
+            mo, aux = moe_mod.moe_apply(p["mlp"], h2, cfg, sites, opts.capacity_factor)
         else:
-            mo = mlp_apply(p["mlp"], h2, cfg, cc)
+            mo = mlp_apply(p["mlp"], h2, cfg, sites)
         x = x + mo
     if return_state and state is None:
         state = jnp.zeros((x.shape[0],), jnp.float32)  # placeholder leaf
     return x, state, aux
 
 
-def block_apply_decode(p, x, state, pos, cfg: ArchConfig, kind: str, opts: ModelOptions):
-    cc = opts.cc
+def block_apply_decode(p, x, state, pos, cfg: ArchConfig, kind: str,
+                       opts: ModelOptions, layers: Tuple[int, ...]):
+    sites = opts.plan.binding(kind, layers)
     h = norm_apply(p["pre_norm"], x, cfg.norm, cfg.norm_eps)
     if kind in ("attn", "local", "xattn"):
-        out, state = attn.attn_decode(p["core"], h, state, pos, cfg, kind=kind, cc=cc)
+        out, state = attn.attn_decode(p["core"], h, state, pos, cfg, kind=kind, sites=sites)
     elif kind == "rglru":
-        out, state = rglru_mod.rglru_decode(p["core"], h, state, cfg, cc)
+        out, state = rglru_mod.rglru_decode(p["core"], h, state, cfg, sites)
     elif kind == "mlstm":
-        out, state = xlstm_mod.mlstm_decode(p["core"], h, state, cfg, cc)
+        out, state = xlstm_mod.mlstm_decode(p["core"], h, state, cfg, sites)
     elif kind == "slstm":
-        out, state = xlstm_mod.slstm_decode(p["core"], h, state, cfg, cc)
+        out, state = xlstm_mod.slstm_decode(p["core"], h, state, cfg, sites)
     x = x + out
     if _has_mlp(cfg, kind):
         h2 = norm_apply(p["post_norm"], x, cfg.norm, cfg.norm_eps)
         if cfg.moe is not None:
-            mo, _ = moe_mod.moe_apply(p["mlp"], h2, cfg, cc, full_capacity=True)
+            mo, _ = moe_mod.moe_apply(p["mlp"], h2, cfg, sites, full_capacity=True)
         else:
-            mo = mlp_apply(p["mlp"], h2, cfg, cc)
+            mo = mlp_apply(p["mlp"], h2, cfg, sites)
         x = x + mo
     return x, state
 
@@ -158,6 +184,13 @@ def init_params(key, cfg: ArchConfig):
     return params
 
 
+def _slot_layers(cfg: ArchConfig, si: int) -> Tuple[int, ...]:
+    """Concrete layer indices pattern slot ``si`` stands for across the
+    scanned units (the slot's GEMM sites form one plan-resolution group)."""
+    P = len(cfg.block_pattern)
+    return tuple(u * P + si for u in range(cfg.n_pattern_units))
+
+
 def _unit_seq(cfg, opts, vision_embeds, return_state, max_len=None):
     pattern = cfg.block_pattern
 
@@ -166,7 +199,7 @@ def _unit_seq(cfg, opts, vision_embeds, return_state, max_len=None):
         aux = jnp.zeros((), jnp.float32)
         for si, kind in enumerate(pattern):
             x, st, a = block_apply_seq(
-                unit_params[f"slot{si}"], x, cfg, kind, opts,
+                unit_params[f"slot{si}"], x, cfg, kind, opts, _slot_layers(cfg, si),
                 vision_embeds=vision_embeds, return_state=return_state, max_len=max_len,
             )
             aux += a
@@ -198,11 +231,12 @@ def forward(
         else:
             aux_total += ys.sum()
     if "rem" in params:
-        rem_kinds = cfg.layer_kinds[cfg.n_pattern_units * len(cfg.block_pattern):]
+        rem_base = cfg.n_pattern_units * len(cfg.block_pattern)
+        rem_kinds = cfg.layer_kinds[rem_base:]
         rem_states = []
-        for p_i, kind in zip(params["rem"], rem_kinds):
+        for i, (p_i, kind) in enumerate(zip(params["rem"], rem_kinds)):
             x, st, a = block_apply_seq(
-                p_i, x, cfg, kind, opts, vision_embeds=vision_embeds,
+                p_i, x, cfg, kind, opts, (rem_base + i,), vision_embeds=vision_embeds,
                 return_state=return_states, max_len=max_len,
             )
             aux_total += a
@@ -210,7 +244,8 @@ def forward(
         if return_states:
             states["rem"] = rem_states
     x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
-    logits = head_apply(params["head"], params["embedding"], x, cfg, opts.cc)
+    logits = head_apply(params["head"], params["embedding"], x, cfg,
+                        opts.plan.site("lm_head"))
     return logits, aux_total, (states if return_states else None)
 
 
@@ -225,7 +260,8 @@ def decode_step(params, token, states, pos, cfg: ArchConfig, opts: ModelOptions)
             new_states = {}
             for si, kind in enumerate(pattern):
                 x, st = block_apply_decode(
-                    unit_params[f"slot{si}"], x, unit_states[f"slot{si}"], pos, cfg, kind, opts
+                    unit_params[f"slot{si}"], x, unit_states[f"slot{si}"], pos,
+                    cfg, kind, opts, _slot_layers(cfg, si)
                 )
                 new_states[f"slot{si}"] = st
             return x, new_states
@@ -234,15 +270,17 @@ def decode_step(params, token, states, pos, cfg: ArchConfig, opts: ModelOptions)
         states = dict(states)
         states["units"] = new_unit_states
     if "rem" in params:
-        rem_kinds = cfg.layer_kinds[cfg.n_pattern_units * len(cfg.block_pattern):]
+        rem_base = cfg.n_pattern_units * len(cfg.block_pattern)
+        rem_kinds = cfg.layer_kinds[rem_base:]
         new_rem = []
-        for p_i, st, kind in zip(params["rem"], states["rem"], rem_kinds):
-            x, st2 = block_apply_decode(p_i, x, st, pos, cfg, kind, opts)
+        for i, (p_i, st, kind) in enumerate(zip(params["rem"], states["rem"], rem_kinds)):
+            x, st2 = block_apply_decode(p_i, x, st, pos, cfg, kind, opts, (rem_base + i,))
             new_rem.append(st2)
         states = dict(states)
         states["rem"] = new_rem
     x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
-    logits = head_apply(params["head"], params["embedding"], x, cfg, opts.cc)
+    logits = head_apply(params["head"], params["embedding"], x, cfg,
+                        opts.plan.site("lm_head"))
     return logits, states
 
 

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.astra_layer import ComputeConfig, EXACT
+from repro.core.plan import SiteBinding, as_binding
 from repro.models.layers import dense, dense_init, norm_apply, norm_init
 from repro.parallel.sharding import shard_act
 
@@ -59,27 +60,29 @@ def mlstm_init(key, cfg: ArchConfig):
     }
 
 
-def _mlstm_qkvif(p, xe: jax.Array, cfg: ArchConfig, cc: ComputeConfig):
+def _mlstm_qkvif(p, xe: jax.Array, cfg: ArchConfig, sites: SiteBinding):
     b, s, e = xe.shape
     h = cfg.n_heads
     dh = e // h
-    q = dense(p["w_q"], xe, cc).reshape(b, s, h, dh).transpose(0, 2, 1, 3) * (dh ** -0.5)
-    k = dense(p["w_k"], xe, cc).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
-    v = dense(p["w_v"], xe, cc).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
-    gif = dense(p["w_if"], xe, cc).astype(jnp.float32).reshape(b, s, 2, h)
+    q = dense(p["w_q"], xe, sites("qkv")).reshape(b, s, h, dh).transpose(0, 2, 1, 3) * (dh ** -0.5)
+    k = dense(p["w_k"], xe, sites("qkv")).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = dense(p["w_v"], xe, sites("qkv")).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    gif = dense(p["w_if"], xe, sites("gates")).astype(jnp.float32).reshape(b, s, 2, h)
     li = gif[:, :, 0].transpose(0, 2, 1)  # [B, H, S] log input gate (pre-exp)
     lf = jax.nn.log_sigmoid(gif[:, :, 1]).transpose(0, 2, 1)  # [B, H, S]
     return q, k, v, li, lf
 
 
 def mlstm_seq(
-    p, x: jax.Array, cfg: ArchConfig, cc: ComputeConfig = EXACT, return_state: bool = False
+    p, x: jax.Array, cfg: ArchConfig,
+    sites: ComputeConfig | SiteBinding = EXACT, return_state: bool = False
 ) -> Tuple[jax.Array, MLSTMState | None]:
     b, s, d = x.shape
     e = 2 * d
-    up = shard_act(dense(p["w_up"], x, cc), ("batch", None, "ffn"))
+    sites = as_binding(sites)
+    up = shard_act(dense(p["w_up"], x, sites("up_proj")), ("batch", None, "ffn"))
     xe, gate = up[..., :e], up[..., e:]
-    q, k, v, li, lf = _mlstm_qkvif(p, xe, cfg, cc)
+    q, k, v, li, lf = _mlstm_qkvif(p, xe, cfg, sites)
     bcum = jnp.cumsum(lf, axis=-1)  # [B, H, S]
     dmat = bcum[..., :, None] - bcum[..., None, :] + li[..., None, :]  # [B,H,S,S]
     mask = jnp.tril(jnp.ones((s, s), bool))
@@ -93,7 +96,7 @@ def mlstm_seq(
     hseq = (num / den[..., None]).astype(x.dtype)  # [B,H,S,dh]
     hmerged = hseq.transpose(0, 2, 1, 3).reshape(b, s, e)
     hmerged = norm_apply(p["out_norm"], hmerged, "rmsnorm", cfg.norm_eps)
-    out = dense(p["w_down"], hmerged * jax.nn.silu(gate), cc)
+    out = dense(p["w_down"], hmerged * jax.nn.silu(gate), sites("down_proj"))
     state = None
     if return_state:
         # fold the whole sequence into the recurrent state for serving
@@ -124,13 +127,15 @@ def mlstm_state_init(cfg: ArchConfig, batch: int) -> MLSTMState:
 
 
 def mlstm_decode(
-    p, x: jax.Array, state: MLSTMState, cfg: ArchConfig, cc: ComputeConfig = EXACT
+    p, x: jax.Array, state: MLSTMState, cfg: ArchConfig,
+    sites: ComputeConfig | SiteBinding = EXACT
 ) -> Tuple[jax.Array, MLSTMState]:
     b, one, d = x.shape
     e = 2 * d
-    up = dense(p["w_up"], x, cc)
+    sites = as_binding(sites)
+    up = dense(p["w_up"], x, sites("up_proj"))
     xe, gate = up[..., :e], up[..., e:]
-    q, k, v, li, lf = _mlstm_qkvif(p, xe, cfg, cc)
+    q, k, v, li, lf = _mlstm_qkvif(p, xe, cfg, sites)
     q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]  # [B, H, dh]
     li, lf = li[..., 0], lf[..., 0]  # [B, H]
     m_new = jnp.maximum(lf + state.m, li)
@@ -144,7 +149,7 @@ def mlstm_decode(
     den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q.astype(jnp.float32))), jnp.exp(-m_new))
     hvec = (num / den[..., None]).reshape(b, 1, e).astype(x.dtype)
     hvec = norm_apply(p["out_norm"], hvec, "rmsnorm", cfg.norm_eps)
-    out = dense(p["w_down"], hvec * jax.nn.silu(gate), cc)
+    out = dense(p["w_down"], hvec * jax.nn.silu(gate), sites("down_proj"))
     return out, MLSTMState(c, n, m_new)
 
 
@@ -193,11 +198,13 @@ def _slstm_cell(p, wx_t: jax.Array, state: SLSTMState) -> Tuple[SLSTMState, jax.
 
 
 def slstm_seq(
-    p, x: jax.Array, cfg: ArchConfig, cc: ComputeConfig = EXACT, return_state: bool = False
+    p, x: jax.Array, cfg: ArchConfig,
+    sites: ComputeConfig | SiteBinding = EXACT, return_state: bool = False
 ) -> Tuple[jax.Array, SLSTMState | None]:
     b, s, d = x.shape
     hh, dh = cfg.n_heads, d // cfg.n_heads
-    wx = dense(p["w_gates"], x, cc).astype(jnp.float32).reshape(b, s, 4, hh, dh)
+    sites = as_binding(sites)
+    wx = dense(p["w_gates"], x, sites("gates_in")).astype(jnp.float32).reshape(b, s, 4, hh, dh)
     state0 = slstm_state_init(cfg, b)
 
     def step(st, wx_t):
@@ -207,23 +214,25 @@ def slstm_seq(
     state, hs = jax.lax.scan(step, state0, jnp.moveaxis(wx, 1, 0))
     hseq = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
     hseq = norm_apply(p["out_norm"], hseq, "rmsnorm", cfg.norm_eps)
-    up = dense(p["w_up"], hseq, cc)
+    up = dense(p["w_up"], hseq, sites("up"))
     f = up.shape[-1] // 2
     y = jax.nn.gelu(up[..., :f]) * up[..., f:]
-    out = dense(p["w_down"], y, cc)
+    out = dense(p["w_down"], y, sites("down"))
     return out, (state if return_state else None)
 
 
 def slstm_decode(
-    p, x: jax.Array, state: SLSTMState, cfg: ArchConfig, cc: ComputeConfig = EXACT
+    p, x: jax.Array, state: SLSTMState, cfg: ArchConfig,
+    sites: ComputeConfig | SiteBinding = EXACT
 ) -> Tuple[jax.Array, SLSTMState]:
     b, one, d = x.shape
     hh, dh = cfg.n_heads, d // cfg.n_heads
-    wx = dense(p["w_gates"], x, cc).astype(jnp.float32).reshape(b, 4, hh, dh)
+    sites = as_binding(sites)
+    wx = dense(p["w_gates"], x, sites("gates_in")).astype(jnp.float32).reshape(b, 4, hh, dh)
     state2, h = _slstm_cell(p, wx, state)
     hseq = h.reshape(b, 1, d).astype(x.dtype)
     hseq = norm_apply(p["out_norm"], hseq, "rmsnorm", cfg.norm_eps)
-    up = dense(p["w_up"], hseq, cc)
+    up = dense(p["w_up"], hseq, sites("up"))
     f = up.shape[-1] // 2
     y = jax.nn.gelu(up[..., :f]) * up[..., f:]
-    return dense(p["w_down"], y, cc), state2
+    return dense(p["w_down"], y, sites("down")), state2

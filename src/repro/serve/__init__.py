@@ -3,7 +3,9 @@
 Public surface:
 
 * :class:`~repro.serve.engine.ServeEngine` — request queue + slotted state
-  + fused chunked decode + per-request ASTRA accounting.
+  + fused chunked decode + per-request ASTRA accounting (energy attributed
+  per GEMM site).  ``ServeEngine(..., plan=...)`` serves under any
+  per-site :class:`~repro.core.plan.ExecutionPlan`.
 * :func:`~repro.serve.decode_loop.make_fused_decode` /
   :func:`~repro.serve.decode_loop.unfused_decode` — the scan-fused decode
   loop and its per-dispatch oracle.

@@ -5,15 +5,21 @@ workload — prefill over the prompt plus one forward per generated token —
 from ``core.simulator.simulate``, so serving reports measured tok/s and
 the paper's latency/energy story side by side (DESIGN.md
 §Arch-applicability describes what maps to VDPEs vs electronic NLUs).
+
+Energy is also attributed per GEMM *site class* (the layer-stripped op id
+from the shared execution/simulator registry, e.g. ``attn.qk`` or
+``rglru.in_proj``) so a serving run can report where the photonic energy
+goes under the active ExecutionPlan.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache
-from typing import Dict
+from typing import Dict, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.energy import AstraChipConfig
+from repro.core.plan import site_class
 from repro.core.simulator import simulate
 
 
@@ -23,15 +29,23 @@ class RequestHardwareReport:
     energy_j: float
     macs: int
     energy_per_mac_j: float
+    # energy attributed per site class (layer-stripped op id), descending
+    energy_by_site: Tuple[Tuple[str, float], ...] = ()
 
     def as_dict(self) -> Dict[str, float]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["energy_by_site"] = dict(self.energy_by_site)
+        return d
 
 
 @lru_cache(maxsize=4096)
 def _simulate_cached(cfg: ArchConfig, chip: AstraChipConfig, seq: int):
     rep = simulate(cfg, chip, seq=seq, batch=1)
-    return rep.latency_s, rep.total_energy_j, rep.macs
+    by_site: Dict[str, float] = {}
+    for c in rep.op_costs:
+        key = site_class(c.name)
+        by_site[key] = by_site.get(key, 0.0) + c.total_energy_j
+    return rep.latency_s, rep.total_energy_j, rep.macs, tuple(sorted(by_site.items()))
 
 
 def request_hardware_report(cfg: ArchConfig, chip: AstraChipConfig,
@@ -44,13 +58,19 @@ def request_hardware_report(cfg: ArchConfig, chip: AstraChipConfig,
     length, which upper-bounds per-token context.
     """
     lat = en = macs = 0.0
-    p_lat, p_en, p_macs = _simulate_cached(cfg, chip, max(prompt_len, 1))
+    sites: Dict[str, float] = {}
+    p_lat, p_en, p_macs, p_sites = _simulate_cached(cfg, chip, max(prompt_len, 1))
     lat, en, macs = lat + p_lat, en + p_en, macs + p_macs
+    for k, v in p_sites:
+        sites[k] = sites.get(k, 0.0) + v
     if gen_len > 0:
         # decode: gen_len single-token forwards amortized at full context
-        d_lat, d_en, d_macs = _simulate_cached(cfg, chip, prompt_len + gen_len)
+        d_lat, d_en, d_macs, d_sites = _simulate_cached(cfg, chip, prompt_len + gen_len)
         scale = gen_len / max(prompt_len + gen_len, 1)
         lat += d_lat * scale
         en += d_en * scale
         macs += d_macs * scale
-    return RequestHardwareReport(lat, en, int(macs), en / max(macs, 1.0))
+        for k, v in d_sites:
+            sites[k] = sites.get(k, 0.0) + v * scale
+    by_site = tuple(sorted(sites.items(), key=lambda kv: -kv[1]))
+    return RequestHardwareReport(lat, en, int(macs), en / max(macs, 1.0), by_site)

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
+from functools import lru_cache
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -31,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import AstraChipConfig
+from repro.core.plan import validate_site_registry
 from repro.models.model import Model
 from repro.serve.accounting import RequestHardwareReport, request_hardware_report
 from repro.serve.decode_loop import make_fused_decode
@@ -87,10 +89,23 @@ class _Slot:
     t_start: float
 
 
+@lru_cache(maxsize=256)
+def _check_site_registry(cfg) -> None:
+    """Executed-GEMM-site <-> simulator-op cross-check, once per config."""
+    validate_site_registry(cfg)
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, config: ServeConfig = ServeConfig(),
-                 chip: Optional[AstraChipConfig] = None):
+                 chip: Optional[AstraChipConfig] = None, plan=None):
+        """``plan`` (optional, any ``ExecutionPlan.from_spec`` form) selects
+        the execution plan for this engine, overriding the model's own."""
+        if plan is not None:
+            model = model.with_plan(plan)
         cfg = model.cfg
+        # every GEMM site this model executes must resolve 1:1 to a
+        # simulator op — the accounting below attributes energy by site
+        _check_site_registry(cfg)
         self.model = model
         self.params = params
         self.config = config

@@ -1,0 +1,228 @@
+"""Per-site ExecutionPlan API.
+
+The load-bearing claims:
+
+* plan resolution: ordered glob rules (``|`` alternatives), first match
+  wins, default fallback; scanned-layer groups must resolve consistently;
+* the deprecation shim ``ModelOptions(cc=...)`` lowers to the uniform plan
+  bit-identically (weight GEMMs under ``cc``; dynamic qk/pv and MoE
+  router/expert GEMMs exact, as the pre-plan code always ran them);
+* registry cross-check: every GEMM site the model executes resolves to
+  exactly one simulator op-graph name, for every architecture in the zoo;
+* a mixed plan (int8 attention qk/pv + sc static projections) runs
+  end-to-end through the serve engine and matches per-request decoding;
+* ``plan.calibrate`` bakes per-site activation scales that keep int8
+  within the uniform-int8 accuracy tolerances;
+* property: quantization against a calibrated static scale round-trips
+  within half a quantization step for in-range values.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import ARCHS, get_arch
+from repro.core.astra_layer import ComputeConfig, EXACT, INT8, SC
+from repro.core.plan import (
+    ExecutionPlan, PRESET_PLANS, model_sites, site_class, validate_site_registry,
+)
+from repro.core.quant import MAG_MAX, quantize
+from repro.models.model import Model
+from repro.models.transformer import ModelOptions, forward
+
+
+# ---------------------------------------------------------------- resolution
+def test_rules_first_match_wins_and_default():
+    plan = ExecutionPlan.from_spec(
+        {"*.qk|*.pv": "int8", "*_proj": "sc", "default": "exact"})
+    assert plan.resolve("L0.attn.qk").mode == "int8"
+    assert plan.resolve("L3.attn.pv").mode == "int8"
+    assert plan.resolve("L0.attn.q_proj").mode == "sc"
+    assert plan.resolve("L1.rglru.in_proj").mode == "sc"
+    assert plan.resolve("L0.attn.up").mode == "exact"
+    assert plan.resolve("lm_head").mode == "exact"
+    # order matters: a broad early rule shadows later ones
+    shadow = ExecutionPlan.from_spec({"L0.*": "int8", "*.qk": "sc"})
+    assert shadow.resolve("L0.attn.qk").mode == "int8"
+    assert shadow.resolve("L1.attn.qk").mode == "sc"
+
+
+def test_from_spec_presets_modes_and_errors():
+    assert ExecutionPlan.from_spec("int8") == ExecutionPlan.uniform(INT8)
+    assert ExecutionPlan.from_spec("mixed") is PRESET_PLANS["mixed"]
+    jplan = ExecutionPlan.from_spec('{"*.qk": "int8"}')
+    assert jplan.resolve("L0.attn.qk").mode == "int8"
+    with pytest.raises(ValueError) as e:
+        ExecutionPlan.from_spec("bogus")
+    msg = str(e.value)
+    assert "mixed" in msg and "exact" in msg  # lists valid presets/modes
+    with pytest.raises(ValueError):
+        ExecutionPlan.from_spec("{not json")
+    with pytest.raises(ValueError):
+        ComputeConfig("fp7")  # helpful mode error, not a bare assert
+
+
+def test_uniform_plan_keeps_dynamic_and_moe_sites_exact():
+    """The legacy shim contract: the pre-plan global cc quantized only the
+    dense() weight GEMMs — qk/pv and the MoE router/expert einsums always
+    ran exact, so the uniform plan must pin them exact too."""
+    plan = ExecutionPlan.uniform(INT8)
+    assert plan.resolve("L0.attn.qk").mode == "exact"
+    assert plan.resolve("L0.attn.pv").mode == "exact"
+    assert plan.resolve("L0.attn.router").mode == "exact"
+    assert plan.resolve("L0.attn.expert_up").mode == "exact"
+    assert plan.resolve("L0.attn.expert_down").mode == "exact"
+    assert plan.resolve("L0.attn.q_proj").mode == "int8"
+
+
+def test_scanned_group_must_resolve_consistently():
+    plan = ExecutionPlan.from_spec({"L0.*": "int8", "default": "exact"})
+    with pytest.raises(ValueError, match="scanned trace"):
+        plan.resolve_group(("L0.attn.qk", "L2.attn.qk"))
+    # consistent groups pass
+    assert plan.resolve_group(("L0.attn.qk", "L0.attn.pv")).mode == "int8"
+
+
+def test_modeloptions_shim_lowers_cc_to_uniform_plan():
+    legacy = ModelOptions(cc=INT8)
+    modern = ModelOptions(plan="int8")
+    assert legacy == modern and hash(legacy) == hash(modern)
+    assert legacy.cc is None and legacy.plan == ExecutionPlan.uniform(INT8)
+
+
+# ------------------------------------------------------- registry cross-check
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_every_executed_site_resolves_to_one_simulator_op(arch):
+    """The acceptance cross-check: execution and the simulator share one
+    op-naming scheme, 1:1 for every GEMM the model runs."""
+    cfg = ARCHS[arch]
+    validate_site_registry(cfg)  # raises on any mismatch
+    assert len(set(model_sites(cfg))) == len(model_sites(cfg))  # unique ids
+
+
+def test_site_class_strips_layer_index():
+    assert site_class("L12.attn.qk") == "attn.qk"
+    assert site_class("lm_head") == "lm_head"
+
+
+# ----------------------------------------------------------------- execution
+@pytest.fixture(scope="module")
+def small():
+    cfg = dataclasses.replace(get_arch("qwen1.5-0.5b").reduced(), dtype="float32")
+    model = Model(cfg, ModelOptions())
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0, cfg.vocab)
+    return cfg, model, params, tokens
+
+
+def test_shim_forward_bitwise_matches_plan_forward(small):
+    cfg, _, params, tokens = small
+    li, _, _ = forward(params, tokens, cfg, ModelOptions(cc=INT8))
+    lp, _, _ = forward(params, tokens, cfg, ModelOptions(plan="int8"))
+    np.testing.assert_array_equal(np.asarray(li), np.asarray(lp))
+
+
+def test_mixed_plan_forward_tracks_exact(small):
+    cfg, _, params, tokens = small
+    lo, _, _ = forward(params, tokens, cfg, ModelOptions())
+    lm, _, _ = forward(params, tokens, cfg, ModelOptions(plan="mixed"))
+    lo, lm = np.asarray(lo, np.float32), np.asarray(lm, np.float32)
+    rel = np.linalg.norm(lm - lo) / np.linalg.norm(lo)
+    assert rel < 0.15, rel  # same bar as the uniform-int8 accuracy test
+    assert (lm.argmax(-1) == lo.argmax(-1)).mean() > 0.9
+
+
+def test_mixed_plan_serve_engine_end_to_end(small, key):
+    """int8 qk/pv + sc projections through the continuous-batching engine.
+
+    With *dynamic* activation scales, quantized numerics depend on batch
+    composition (per-tensor amax over whatever shares the dispatch), so a
+    batched engine cannot match per-request decoding token-for-token.
+    Calibration is what restores request-level determinism: static per-site
+    scales make every GEMM row-independent, so the engine under a
+    *calibrated* mixed plan must be token-identical to per-request greedy
+    decoding under the same plan."""
+    from repro.serve import ServeConfig, ServeEngine
+    from repro.serve.prefill import pack_prompts
+
+    cfg, model, params, _ = small
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(key, i), (l,),
+                                             0, cfg.vocab), np.int32)
+               for i, l in enumerate((5, 9))]
+    cal_tokens, _ = pack_prompts(prompts, cfg)
+    mixed = model.with_plan("mixed").calibrate(params, {"tokens": cal_tokens})
+    assert mixed.plan.act_scales  # calibration actually observed sites
+    eng = ServeEngine(model, params, ServeConfig(max_slots=2, max_len=24,
+                                                 chunk_steps=3), plan=mixed.plan)
+    outs = eng.generate_batch(prompts, max_new_tokens=6)
+    decode = jax.jit(mixed.decode)
+    for p, o in zip(prompts, outs):
+        assert o.gen_len == 6
+        assert o.hardware is not None and dict(o.hardware.energy_by_site)
+        states = mixed.init_decode_state(1, 24)
+        logits = None
+        t = jnp.asarray(p)[None]
+        for i in range(p.shape[-1]):
+            logits, states = decode(params, t[:, i:i + 1], states, jnp.int32(i))
+        ref = []
+        for i in range(p.shape[-1], p.shape[-1] + 6):
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            ref.append(int(tok[0, 0]))
+            logits, states = decode(params, tok, states, jnp.int32(i))
+        np.testing.assert_array_equal(o.tokens, np.asarray(ref, np.int32))
+
+
+# --------------------------------------------------------------- calibration
+def test_calibrate_bakes_per_site_scales(small):
+    cfg, model, params, tokens = small
+    cal = model.with_plan("int8").calibrate(params, {"tokens": tokens})
+    scales = dict(cal.plan.act_scales)
+    assert scales, "calibration observed no sites"
+    assert set(scales) <= set(model_sites(cfg))
+    assert all(s > 0 for s in scales.values())
+    # resolution injects the static scale into quantized sites only
+    some_site = next(iter(scales))
+    assert cal.plan.resolve(some_site).act_scale == pytest.approx(scales[some_site])
+    exact_plan = ExecutionPlan.uniform(EXACT)
+    assert exact_plan.resolve(some_site).act_scale is None
+
+
+def test_calibrated_int8_tracks_exact_within_uniform_tolerance(small):
+    """Per-site calibrated int8 stays inside the tolerance the uniform-int8
+    accuracy test (test_astra_modes) already enforces."""
+    cfg, model, params, tokens = small
+    lo, _, _ = forward(params, tokens, cfg, ModelOptions())
+    cal = model.with_plan("int8").calibrate(params, {"tokens": tokens})
+    lc, _, _ = forward(params, tokens, cfg, cal.opts)
+    lo, lc = np.asarray(lo, np.float32), np.asarray(lc, np.float32)
+    rel = np.linalg.norm(lc - lo) / np.linalg.norm(lo)
+    assert rel < 0.15, rel
+    assert (lc.argmax(-1) == lo.argmax(-1)).mean() > 0.9
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 10_000), st.integers(0, 2**31 - 1))
+def test_calibrated_quant_roundtrip_property(amax_milli, seed):
+    """Quantizing against a calibrated static scale round-trips within half
+    a quantization step for every in-range value (the per-site PTQ
+    contract the serving path relies on)."""
+    amax = amax_milli / 1000.0
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-amax, amax, size=(64,)), jnp.float32)
+    scale = amax / MAG_MAX  # what ExecutionPlan.calibrate bakes per site
+    qt = quantize(x, axis=None, scale=scale)
+    err = np.abs(np.asarray(qt.dequantize()) - np.asarray(x))
+    assert err.max() <= scale / 2 + 1e-7
+
+
+# ------------------------------------------------------------------ CLI gate
+def test_cli_rejects_bad_plan_with_helpful_message(capsys):
+    from repro.launch.serve import main
+
+    with pytest.raises(SystemExit):
+        main(["--plan", "bogus-plan"])
+    err = capsys.readouterr().err
+    assert "mixed" in err and "int8" in err  # lists valid presets/modes

@@ -7,7 +7,7 @@ The load-bearing claims:
   attention stacks; masked scan for recurrent/sliding-window stacks);
 * slots are reused: more requests than slots all complete correctly;
 * the fused ``lax.scan`` decode loop is token-identical to the seed-style
-  per-step dispatch loop across exact/int8 modes;
+  per-step dispatch loop across exact/int8/sc modes;
 * sampling: temperature draws are reproducible, top-k stays in the top-k.
 """
 import dataclasses
@@ -163,7 +163,7 @@ def test_eos_stops_early(key):
 
 
 # ------------------------------------------------- fused vs per-step loop
-@pytest.mark.parametrize("mode", ["exact", "int8"])
+@pytest.mark.parametrize("mode", ["exact", "int8", "sc"])
 @pytest.mark.parametrize("sampler", [GREEDY, SamplerConfig(0.8, 5)],
                          ids=["greedy", "topk"])
 def test_fused_scan_matches_dispatch_loop(mode, sampler, key):
