@@ -1,7 +1,8 @@
-"""Serving throughput: fused scan decode vs the seed per-step dispatch loop.
+"""Serving throughput: fused scan decode vs per-step dispatch, and
+shared-prefix time-to-first-token under the paged KV prefix cache.
 
-Sweeps batch size x prompt-length mix on a reduced config and reports
-decode tok/s for:
+Part 1 (``run``) sweeps batch size x prompt-length mix on a reduced
+config and reports decode tok/s for:
 
 * ``unfused`` — the seed driver's loop: one ``jit(decode)`` dispatch per
   token (host overhead per step),
@@ -12,11 +13,18 @@ decode tok/s for:
 
 Claim under test (ISSUE 1): fused >= 2x unfused at batch 8.
 
-Always writes machine-readable results to ``BENCH_serve_throughput.json``
-at the repo root (the cross-PR perf trajectory); ``--json`` adds an extra
-copy wherever you want it.
+Part 2 (``run_kv_cache``) serves a shared-prefix workload (think: one
+system prompt, many user suffixes) with the radix-tree prefix cache on
+vs off (``ServeConfig(kv_block_size=..., prefix_cache=...)``).
 
-  PYTHONPATH=src python benchmarks/serve_throughput.py [--json out.json]
+Claim under test (ISSUE 3): prefix reuse cuts time-to-first-token >= 2x
+at >= 50 % prefix overlap, token-identically.
+
+Always writes machine-readable results to ``BENCH_serve_throughput.json``
+/ ``BENCH_kv_cache.json`` at the repo root (the cross-PR perf
+trajectory); ``--json`` adds an extra copy, ``--only`` selects one part.
+
+  PYTHONPATH=src python benchmarks/serve_throughput.py [--only kv_cache]
 """
 from __future__ import annotations
 
@@ -133,19 +141,116 @@ def run(log=print):
     return {"cells": cells, "min_fused_speedup_b8": worst, "claim_pass": bool(ok)}
 
 
+# ------------------------------------------------- shared-prefix TTFT
+def _ttft_engine(model, params, prompts, prime, max_len, block, prefix_on,
+                 repeats=3):
+    """Best-of-N wall time for one packed admission of ``prompts`` with
+    ``max_new_tokens=1`` — prefill through first sampled token (TTFT).
+    Each timed run uses a fresh engine primed with ``prime`` (the shared
+    prefix plus one token, so the whole prefix is interned block-aligned),
+    keeping cache state identical across repeats."""
+
+    def once():
+        eng = ServeEngine(model, params, ServeConfig(
+            max_slots=len(prompts), max_len=max_len, chunk_steps=4,
+            kv_block_size=block, prefix_cache=prefix_on,
+            astra_accounting=False))
+        eng.generate_batch([prime], 1)  # prime: interns the prefix
+        t0 = time.time()
+        outs = eng.generate_batch(prompts, 1)
+        dt = time.time() - t0
+        return dt, [o.tokens for o in outs], eng.prefix_stats
+
+    once()  # warm the jit caches for this (shapes, ctx-bucket) combo
+    best, toks, stats = min((once() for _ in range(repeats)), key=lambda r: r[0])
+    return best, toks, stats
+
+
+def run_kv_cache(log=print):
+    log("# shared-prefix TTFT: radix prefix cache on vs off (reduced config)")
+    # exact mode: int8's dynamic per-tensor act scales depend on the packed
+    # batch shape, so on/off token parity there needs PTQ calibration —
+    # the parity claim is cleanest under exact numerics
+    arch, mode, batch, block = "stablelm-1.6b", "exact", 8, 16
+    key = jax.random.PRNGKey(0)
+    cfg = get_arch(arch).reduced()
+    model = Model(cfg, ModelOptions(cc=ComputeConfig(mode)))
+    params = Model(cfg, ModelOptions()).init(key)
+    prompt_len = 512
+    max_len = prompt_len + 8
+    cells = []
+    for prefix_len in (256, 448):  # 50 % and 87.5 % prompt overlap
+        prefix = np.asarray(
+            jax.random.randint(jax.random.fold_in(key, prefix_len),
+                               (prefix_len,), 0, cfg.vocab), np.int32)
+        prime = np.concatenate([prefix, np.zeros(1, np.int32)])
+        prompts = []
+        for i in range(batch):
+            tail = np.asarray(
+                jax.random.randint(jax.random.fold_in(key, 1000 + i),
+                                   (prompt_len - prefix_len,), 0, cfg.vocab), np.int32)
+            prompts.append(np.concatenate([prefix, tail]))
+        t_on, toks_on, stats = _ttft_engine(model, params, prompts, prime,
+                                            max_len, block, prefix_on=True)
+        t_off, toks_off, _ = _ttft_engine(model, params, prompts, prime,
+                                          max_len, block, prefix_on=False)
+        identical = all(np.array_equal(a, b) for a, b in zip(toks_on, toks_off))
+        overlap = prefix_len / prompt_len
+        cell = {
+            "arch": arch, "mode": mode, "batch": batch,
+            "prompt_len": prompt_len, "prefix_len": prefix_len,
+            "overlap": overlap, "kv_block_size": block,
+            "ttft_on_s": t_on, "ttft_off_s": t_off,
+            "ttft_speedup": t_off / t_on,
+            "hit_tokens": stats.get("hit_tokens", 0),
+            "tokens_identical": bool(identical),
+        }
+        cells.append(cell)
+        log(f"kv_cache,{arch},{mode},b={batch},overlap={overlap:.0%},"
+            f"ttft_on={t_on * 1e3:.1f}ms,ttft_off={t_off * 1e3:.1f}ms,"
+            f"speedup={cell['ttft_speedup']:.2f}x,identical={identical}")
+    # claim (ISSUE 3 acceptance): exhibit >= 2x TTFT at an overlap >= 50 %,
+    # token-identically.  Both cells are recorded; the gate is existential
+    # (>= 2x somewhere at qualifying overlap), with per-cell speedups in
+    # the JSON so the full overlap curve stays visible.
+    qualifying = [c for c in cells if c["overlap"] >= 0.5 and c["tokens_identical"]]
+    best = max((c["ttft_speedup"] for c in qualifying), default=0.0)
+    ok = best >= 2.0 and all(c["tokens_identical"] for c in cells)
+    log(f"kv_cache,best TTFT speedup at >=50% overlap={best:.2f}x (>=2.0),"
+        f"{'PASS' if ok else 'FAIL'}")
+    return {
+        "cells": cells,
+        "claim": ">=2x TTFT at some overlap >= 50%, token-identical",
+        "best_ttft_speedup": best,
+        "min_ttft_speedup": min((c["ttft_speedup"] for c in qualifying), default=0.0),
+        "claim_pass": bool(ok),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="", help="extra copy of the results")
+    ap.add_argument("--only", default="", choices=["", "fused", "kv_cache"],
+                    help="run a single part (default: both)")
     args = ap.parse_args(argv)
-    out = run()
-    paths = [os.path.join(REPO_ROOT, "BENCH_serve_throughput.json")]
-    if args.json:
-        paths.append(args.json)
-    for path in paths:
+    results = {}
+    if args.only in ("", "fused"):
+        results["serve_throughput"] = run()
+    if args.only in ("", "kv_cache"):
+        results["kv_cache"] = run_kv_cache()
+    for name, out in results.items():
+        path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
         with open(path, "w") as f:
             json.dump(out, f, indent=2)
         print(f"wrote {path}")
-    return out
+    if args.json:
+        # the extra copy carries every part that ran (a single-section
+        # run stays shaped like that section for drop-in compatibility)
+        out = next(iter(results.values())) if len(results) == 1 else results
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
+    return results
 
 
 if __name__ == "__main__":

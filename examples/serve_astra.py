@@ -7,7 +7,9 @@ expectation mode, compares generations against the fp32 reference, and
 prints the modeled photonic hardware cost per request (attributed per
 GEMM site).  Any flag of ``repro.launch.serve`` works — notably
 ``--plan mixed --calibrate`` for the per-site execution-plan path
-(int8 attention qk/pv + stochastic-stream projections, PTQ-calibrated).
+(int8 attention qk/pv + stochastic-stream projections, PTQ-calibrated;
+docs/PLANS.md) and ``--kv-block-size`` / ``--no-prefix-cache`` for the
+paged KV cache with radix-tree prefix reuse (docs/SERVING.md).
 
   PYTHONPATH=src python examples/serve_astra.py [--arch stablelm-1.6b]
 """
@@ -19,7 +21,7 @@ if __name__ == "__main__":
     argv = sys.argv[1:] or [
         "--arch", "stablelm-1.6b", "--reduced",
         "--batch", "6", "--prompt-mix", "16,32,64", "--gen", "16",
-        "--max-slots", "4", "--chunk-steps", "8",
+        "--max-slots", "4", "--chunk-steps", "8", "--kv-block-size", "16",
         "--mode", "int8", "--compare-exact",
     ]
     main(argv)

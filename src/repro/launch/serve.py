@@ -13,9 +13,14 @@ the three ASTRA numeric modes:
 
 Execution modes are selected per GEMM site via ``--plan`` (preset name,
 uniform mode, or JSON glob rules over the shared execution/simulator site
-registry); ``--mode`` remains as the uniform shorthand.  ``--calibrate``
-runs a PTQ calibration pass (per-site activation scales) on a synthetic
-batch before serving.
+registry — docs/PLANS.md); ``--mode`` remains as the uniform shorthand.
+``--calibrate`` runs a PTQ calibration pass (per-site activation scales)
+on a synthetic batch before serving.
+
+KV memory is paged by default (``--kv-block-size``, docs/SERVING.md):
+attention KV lives in fixed-size pooled blocks with radix-tree prefix
+reuse on pure global-attention stacks (``--no-prefix-cache`` disables the
+reuse; ``--kv-block-size 0`` restores the dense per-slot layout).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
@@ -107,7 +112,9 @@ def _make_prompts(cfg, lengths, key):
 def _run_engine(model, params, prompts, args, sampler):
     max_len = max(p.shape[-1] for p in prompts) + args.gen + 1
     cfg = ServeConfig(max_slots=args.max_slots or len(prompts), max_len=max_len,
-                      chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed)
+                      chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed,
+                      kv_block_size=args.kv_block_size,
+                      prefix_cache=not args.no_prefix_cache)
     # warm run on a throwaway engine: the jitted prefill/chunk programs are
     # memoized per model, so the timed run below measures serving, not XLA
     # compilation
@@ -118,7 +125,7 @@ def _run_engine(model, params, prompts, args, sampler):
     t0 = time.time()
     outs = engine.generate_batch(prompts, args.gen)
     dt = max(time.time() - t0, 1e-9)
-    return outs, sum(o.gen_len for o in outs) / dt
+    return outs, sum(o.gen_len for o in outs) / dt, engine.prefix_stats
 
 
 def _parse_plan(ap: argparse.ArgumentParser, spec: str) -> ExecutionPlan:
@@ -131,6 +138,23 @@ def _parse_plan(ap: argparse.ArgumentParser, spec: str) -> ExecutionPlan:
             f"  uniform modes: {', '.join(MODES)}\n"
             "  or JSON rules, e.g. "
             '\'{"*.qk|*.pv": "int8", "*_proj": "sc", "default": "exact"}\''
+        )
+
+
+def _validate_kv_flags(ap: argparse.ArgumentParser, args) -> None:
+    """Validate the paged-KV flags at the CLI, not deep inside the engine
+    (the engine re-checks the pool-capacity arithmetic at construction)."""
+    if args.kv_block_size < 0:
+        ap.error(
+            f"--kv-block-size: {args.kv_block_size} is negative; pass a "
+            "positive block size (tokens per KV block, docs/SERVING.md) or "
+            "0 for the dense per-slot layout"
+        )
+    if args.no_prefix_cache and args.kv_block_size == 0:
+        ap.error(
+            "--no-prefix-cache only applies to the paged KV cache; it is "
+            "meaningless with --kv-block-size 0 (dense layout has no "
+            "prefix cache to disable)"
         )
 
 
@@ -159,10 +183,16 @@ def main(argv=None):
                     help="fused decode steps per dispatch")
     ap.add_argument("--max-slots", type=int, default=0,
                     help="engine slots (0 = one per request)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="paged KV cache block size in tokens "
+                         "(docs/SERVING.md); 0 = dense per-slot caches")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix-tree prefix reuse (paged mode only)")
     ap.add_argument("--compare-exact", action="store_true",
                     help="also run exact mode and report token agreement")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    _validate_kv_flags(ap, args)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -184,9 +214,14 @@ def main(argv=None):
         cal_tokens, _ = pack_prompts(prompts, cfg)
         model = model.calibrate(params, {"tokens": cal_tokens})
         print(f"calibrated {len(model.plan.act_scales)} site activation scales")
-    outs, tps = _run_engine(model, params, prompts, args, sampler)
+    outs, tps, prefix_stats = _run_engine(model, params, prompts, args, sampler)
     print(f"[{plan_label}] {len(outs)} requests (prompt lens {sorted(set(lengths))}), "
           f"{args.gen} new tokens each: {tps:.1f} tok/s")
+    if prefix_stats:
+        print(f"  prefix cache: {prefix_stats['hits']} hits / "
+              f"{prefix_stats['misses']} misses, "
+              f"{prefix_stats['hit_tokens']} prompt tokens reused, "
+              f"{prefix_stats['evictions']} evictions")
     site_energy: dict = {}
     for o in outs:
         hw = o.hardware
@@ -206,7 +241,7 @@ def main(argv=None):
 
     all_exact = all(model.plan.resolve(s).mode == "exact" for s in model_sites(cfg))
     if args.compare_exact and not all_exact:
-        outs_ref, _ = _run_engine(base_model, params, prompts, args, sampler)
+        outs_ref, _, _ = _run_engine(base_model, params, prompts, args, sampler)
         agree = np.mean([
             np.mean(o.tokens == r.tokens) for o, r in zip(outs, outs_ref)
         ])

@@ -6,6 +6,16 @@ Three entry points per block:
   * ``attn_decode`` — one-token step against a pre-allocated KV cache
     (global: [B, kv, S_max, hd] with position write; local: ring buffer of
     ``window``; cross: static frontend KV, read-only).
+  * ``attn_prefill_paged`` — multi-token suffix prefill against a *paged*
+    cache with past context (the serve engine's prefix-cache path).
+
+Serving caches come in two layouts (docs/SERVING.md):
+  * dense ``KVCache`` — one max-length buffer per slot (the legacy layout);
+  * paged ``PagedKVCache`` — a global pool of fixed-size blocks
+    ``[n_blocks, n_kv, block_size, hd]`` addressed through per-slot block
+    tables (``BlockTables``).  Reads gather the table into a logical view;
+    writes scatter into the owning block.  Block 0 is a scratch sink for
+    padded/overrun writes (never read at an unmasked position).
 
 The softmax attention itself defaults to jnp einsum (XLA-native; gives the
 dry-run an honest FLOP/byte profile) and can be swapped for the Pallas
@@ -38,6 +48,27 @@ from repro.parallel.sharding import shard_act
 class KVCache(NamedTuple):
     k: jax.Array  # [B, n_kv, S_cache, hd]
     v: jax.Array  # [B, n_kv, S_cache, hd]
+
+
+class PagedKVCache(NamedTuple):
+    """Pooled KV storage: physical blocks shared by every slot."""
+
+    k: jax.Array  # [n_blocks, n_kv, block_size, hd]
+    v: jax.Array  # [n_blocks, n_kv, block_size, hd]
+
+
+class BlockTables(NamedTuple):
+    """Per-slot logical->physical block mapping, shared across layers.
+
+    ``table[b, i]`` is the physical block holding slot ``b``'s positions
+    ``[i*bs, (i+1)*bs)`` (global attn) or ring slots in that range (local
+    attn).  Unallocated entries point at scratch block 0.  ``ring_len`` is
+    the sliding-window ring length for local layers (min(max_len, window));
+    global layers ignore it.
+    """
+
+    table: jax.Array  # [B, W] int32
+    ring_len: jax.Array  # [] int32
 
 
 def attn_init(key, cfg: ArchConfig, cross: bool = False):
@@ -108,20 +139,33 @@ def _sdpa(q, k, v, *, causal: bool, window: int, q_offset: int | jax.Array = 0,
     s = s * (hd ** -0.5)
     if softcap > 0:
         s = jnp.tanh(s / softcap) * softcap
-    q_pos = jnp.arange(sq)[:, None] + q_offset
-    k_pos = jnp.arange(sk)[None, :]
-    mask = jnp.ones((sq, sk), bool)
-    if causal:
-        mask &= q_pos >= k_pos
-    if window > 0:
-        mask &= (q_pos - k_pos) < window
-    if kv_len is not None and jnp.ndim(kv_len) == 1:
-        bmask = mask[None] & (k_pos[None] < kv_len[:, None, None])  # [B, sq, sk]
-        s = jnp.where(bmask[:, None, None], s, -1e30)
-    else:
+    if jnp.ndim(q_offset) == 1:
+        # per-batch query offsets (paged suffix prefill: each slot's suffix
+        # starts at its own absolute position) -> [B, sq, sk] masks
+        q_pos = jnp.arange(sq)[None, :, None] + jnp.asarray(q_offset)[:, None, None]
+        k_pos = jnp.arange(sk)[None, None, :]
+        m = q_pos >= k_pos if causal else jnp.ones((1, sq, sk), bool)
+        if window > 0:
+            m &= (q_pos - k_pos) < window
         if kv_len is not None:
-            mask &= k_pos < kv_len
-        s = jnp.where(mask[None, None, None], s, -1e30)
+            kl = jnp.asarray(kv_len)
+            m &= k_pos < (kl[:, None, None] if kl.ndim == 1 else kl)
+        s = jnp.where(m[:, None, None], s, -1e30)
+    else:
+        q_pos = jnp.arange(sq)[:, None] + q_offset
+        k_pos = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        if kv_len is not None and jnp.ndim(kv_len) == 1:
+            bmask = mask[None] & (k_pos[None] < kv_len[:, None, None])  # [B, sq, sk]
+            s = jnp.where(bmask[:, None, None], s, -1e30)
+        else:
+            if kv_len is not None:
+                mask &= k_pos < kv_len
+            s = jnp.where(mask[None, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = _pv_out(p, v, pv)
     return o.reshape(b, h, sq, hd).astype(q.dtype)
@@ -213,16 +257,56 @@ def init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype=None)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
 
+def init_paged_cache(cfg: ArchConfig, n_blocks: int, block_size: int,
+                     dtype=None) -> PagedKVCache:
+    """Zeroed block pool for one attention layer (global or local kind).
+    Same dtype rule as :func:`init_cache`."""
+    if dtype is None:
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    shape = (n_blocks, cfg.n_kv_heads, block_size, cfg.head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _paged_view(cache: PagedKVCache, table: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Gather each slot's logical KV from the pool.
+
+    table [B, W] -> k/v [B, n_kv, W*block_size, hd]: logical position ``p``
+    of slot ``b`` lives at ``pool[table[b, p // bs], :, p % bs]``.
+    """
+    def gather(pool):
+        nb, kvh, bs, hd = pool.shape
+        g = pool[table]  # [B, W, kv, bs, hd]
+        return jnp.moveaxis(g, 1, 2).reshape(table.shape[0], kvh, -1, hd)
+
+    return gather(cache.k), gather(cache.v)
+
+
+def _paged_write_token(cache: PagedKVCache, table: jax.Array, slot: jax.Array,
+                       k_new: jax.Array, v_new: jax.Array) -> PagedKVCache:
+    """Scatter one token per batch row into its block.  slot [B] is the
+    logical cache position (absolute pos, or ring slot for local attn);
+    k_new/v_new [B, n_kv, 1, hd].  Rows sharing a physical block (only the
+    scratch sink, by engine invariant) race benignly."""
+    bs = cache.k.shape[2]
+    b = slot.shape[0]
+    pb = table[jnp.arange(b), slot // bs]  # [B] physical block per row
+    off = slot % bs
+    k = cache.k.at[pb, :, off].set(k_new[:, :, 0].astype(cache.k.dtype))
+    v = cache.v.at[pb, :, off].set(v_new[:, :, 0].astype(cache.v.dtype))
+    return PagedKVCache(k, v)
+
+
 def attn_decode(
     p,
     x: jax.Array,  # [B, 1, D]
-    cache: KVCache,
+    cache: Union[KVCache, PagedKVCache],
     pos: jax.Array,  # [] int32 — absolute position of the new token, or [B]
     cfg: ArchConfig,
     *,
     kind: str,
     sites: Union[ComputeConfig, SiteBinding] = EXACT,
-) -> Tuple[jax.Array, KVCache]:
+    tables: Optional[BlockTables] = None,
+) -> Tuple[jax.Array, Union[KVCache, PagedKVCache]]:
     b = x.shape[0]
     sites = as_binding(sites)
     pos = jnp.asarray(pos, jnp.int32)
@@ -242,6 +326,21 @@ def attn_decode(
     v_new = _split_heads(dense(p["wv"], x, sites("kv_proj")), cfg.n_kv_heads, cfg.head_dim)
     q = apply_rope(q, posb, cfg.rope_pct, cfg.rope_theta)
     k_new = apply_rope(k_new, posb, cfg.rope_pct, cfg.rope_theta)
+    if isinstance(cache, PagedKVCache):
+        assert tables is not None, "paged decode needs a BlockTables"
+        pos_v = pos if per_slot else jnp.broadcast_to(pos, (b,))
+        if kind == "local":
+            ring = tables.ring_len
+            slot_v = pos_v % ring
+            kv_len = jnp.minimum(pos_v + 1, ring)
+        else:
+            slot_v = pos_v
+            kv_len = pos_v + 1
+        cache = _paged_write_token(cache, tables.table, slot_v, k_new, v_new)
+        k_log, v_log = _paged_view(cache, tables.table)
+        o = _sdpa(q, k_log, v_log, causal=False, window=0, kv_len=kv_len,
+                  softcap=cfg.logit_softcap, qk=qk_b, pv=pv_b)
+        return dense(p["wo"], _merge_heads(o), sites("o_proj")), cache
     s_cache = cache.k.shape[2]
     # global caches are pre-allocated >= pos+1 (no wrap); local rings wrap
     slot = pos % s_cache if kind == "local" else pos
@@ -264,3 +363,74 @@ def attn_decode(
                   qk=qk_b, pv=pv_b)
     out = dense(p["wo"], _merge_heads(o), sites("o_proj"))
     return out, KVCache(k, v)
+
+
+def _paged_write_blocks(pool: jax.Array, table: jax.Array, start_blk: jax.Array,
+                        new: jax.Array) -> jax.Array:
+    """Scatter whole blocks into the pool.
+
+    pool [n_blocks, kv, bs, hd]; new [B, kv, S_pad, hd] with S_pad a
+    multiple of bs, landing at each row's blocks ``start_blk + j``.
+    Indices past the table width (packed-prefill overrun into another
+    slot's padding region) are redirected to the scratch sink — those
+    positions are either overwritten by decode before any read exposes
+    them, or never readable at all.
+    """
+    b, kvh, s_pad, hd = new.shape
+    bs = pool.shape[2]
+    nb = s_pad // bs
+    w = table.shape[1]
+    idx = start_blk[:, None] + jnp.arange(nb)[None, :]  # [B, nb] logical
+    pb = jnp.take_along_axis(table, jnp.minimum(idx, w - 1), axis=1)
+    pb = jnp.where(idx < w, pb, 0)  # overrun -> scratch
+    blocks = jnp.moveaxis(new.reshape(b, kvh, nb, bs, hd), 1, 2)  # [B, nb, kv, bs, hd]
+    return pool.at[pb].set(blocks.astype(pool.dtype))
+
+
+def attn_prefill_paged(
+    p,
+    x: jax.Array,  # [B, S_suf, D] packed suffixes
+    cache: PagedKVCache,
+    table: jax.Array,  # [B, W]
+    start: jax.Array,  # [B] block-aligned absolute start of each suffix
+    cfg: ArchConfig,
+    *,
+    sites: Union[ComputeConfig, SiteBinding] = EXACT,
+    ctx_blocks: int,
+) -> Tuple[jax.Array, PagedKVCache]:
+    """Suffix prefill with past: global causal attention over the packed
+    suffixes against prefix KV already resident in the pool.
+
+    The serve engine's prefix-cache path: matched prompt blocks are reused
+    verbatim, only the unmatched suffix runs here.  ``start`` must be
+    block-aligned (the radix tree matches whole blocks).  ``ctx_blocks``
+    (static) bounds the gathered context view; it must cover the longest
+    ``start + S_suf`` in the batch.  Padded rows write garbage into the
+    writer's own future blocks or scratch — never into readable positions.
+    """
+    b, s, _ = x.shape
+    bs = cache.k.shape[2]
+    sites = as_binding(sites)
+    positions = start[:, None] + jnp.arange(s)[None, :]  # [B, S]
+    q = _split_heads(dense(p["wq"], x, sites("q_proj")), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(dense(p["wk"], x, sites("kv_proj")), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(p["wv"], x, sites("kv_proj")), cfg.n_kv_heads, cfg.head_dim)
+    q = shard_act(q, ("batch", "heads", None, None))
+    q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
+    pad = (-s) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    start_blk = start // bs
+    cache = PagedKVCache(
+        _paged_write_blocks(cache.k, table, start_blk, k),
+        _paged_write_blocks(cache.v, table, start_blk, v),
+    )
+    ctx_tbl = jax.lax.slice(table, (0, 0), (b, ctx_blocks))
+    k_log, v_log = _paged_view(cache, ctx_tbl)
+    o = _sdpa(q, k_log, v_log, causal=True, window=0, q_offset=start,
+              softcap=cfg.logit_softcap, qk=sites("qk"), pv=sites("pv"))
+    o = shard_act(o, ("batch", "heads", None, None))
+    out = shard_act(dense(p["wo"], _merge_heads(o), sites("o_proj")), ("batch", None, None))
+    return out, cache

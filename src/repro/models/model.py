@@ -18,6 +18,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.plan import ExecutionPlan
 from repro.models.transformer import (
     ModelOptions, decode_step, forward, init_decode_state, init_params,
+    suffix_forward,
 )
 
 
@@ -90,11 +91,21 @@ class Model:
         )
         return logits, states
 
-    def decode(self, params, token, states, pos):
-        return decode_step(params, token, states, pos, self.cfg, self.opts)
+    def decode(self, params, token, states, pos, block_tables=None):
+        return decode_step(params, token, states, pos, self.cfg, self.opts,
+                           block_tables=block_tables)
 
-    def init_decode_state(self, batch: int, max_len: int):
-        return init_decode_state(self.cfg, batch, max_len)
+    def prefill_suffix(self, params, tokens, states, table, start, ctx_blocks: int):
+        """Prefix-aware packed prefill against the paged KV pool (pure
+        global-attention stacks; docs/SERVING.md).  Returns full suffix
+        logits plus the updated pooled states."""
+        return suffix_forward(params, tokens, self.cfg, self.opts, states,
+                              table, start, ctx_blocks)
+
+    def init_decode_state(self, batch: int, max_len: int, paged=None):
+        """``paged=(n_blocks, block_size)`` builds the pooled layout for
+        attn/local caches (see ``transformer.init_decode_state``)."""
+        return init_decode_state(self.cfg, batch, max_len, paged)
 
 
 # ---------------------------------------------------------------- specs

@@ -123,11 +123,13 @@ def block_apply_seq(
 
 
 def block_apply_decode(p, x, state, pos, cfg: ArchConfig, kind: str,
-                       opts: ModelOptions, layers: Tuple[int, ...]):
+                       opts: ModelOptions, layers: Tuple[int, ...],
+                       block_tables=None):
     sites = opts.plan.binding(kind, layers)
     h = norm_apply(p["pre_norm"], x, cfg.norm, cfg.norm_eps)
     if kind in ("attn", "local", "xattn"):
-        out, state = attn.attn_decode(p["core"], h, state, pos, cfg, kind=kind, sites=sites)
+        out, state = attn.attn_decode(p["core"], h, state, pos, cfg, kind=kind,
+                                      sites=sites, tables=block_tables)
     elif kind == "rglru":
         out, state = rglru_mod.rglru_decode(p["core"], h, state, cfg, sites)
     elif kind == "mlstm":
@@ -145,7 +147,11 @@ def block_apply_decode(p, x, state, pos, cfg: ArchConfig, kind: str,
     return x, state
 
 
-def block_state_init(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+def block_state_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     paged: Optional[Tuple[int, int]] = None):
+    if kind in ("attn", "local") and paged is not None:
+        n_blocks, block_size = paged
+        return attn.init_paged_cache(cfg, n_blocks, block_size)
     if kind in ("attn", "local", "xattn"):
         return attn.init_cache(cfg, kind, batch, max_len)
     if kind == "rglru":
@@ -249,8 +255,12 @@ def forward(
     return logits, aux_total, (states if return_states else None)
 
 
-def decode_step(params, token, states, pos, cfg: ArchConfig, opts: ModelOptions):
-    """One serving step.  token [B,1] (or [B,C,1] multi-codebook) -> logits."""
+def decode_step(params, token, states, pos, cfg: ArchConfig, opts: ModelOptions,
+                block_tables=None):
+    """One serving step.  token [B,1] (or [B,C,1] multi-codebook) -> logits.
+
+    ``block_tables`` (an :class:`attn.BlockTables`, optional) routes the
+    attn/local cache reads and writes through the paged pool."""
     x = embed_tokens(params["embedding"], token, cfg)
     if "units" in params:
         pattern = cfg.block_pattern
@@ -261,7 +271,7 @@ def decode_step(params, token, states, pos, cfg: ArchConfig, opts: ModelOptions)
             for si, kind in enumerate(pattern):
                 x, st = block_apply_decode(
                     unit_params[f"slot{si}"], x, unit_states[f"slot{si}"], pos,
-                    cfg, kind, opts, _slot_layers(cfg, si)
+                    cfg, kind, opts, _slot_layers(cfg, si), block_tables
                 )
                 new_states[f"slot{si}"] = st
             return x, new_states
@@ -274,7 +284,8 @@ def decode_step(params, token, states, pos, cfg: ArchConfig, opts: ModelOptions)
         rem_kinds = cfg.layer_kinds[rem_base:]
         new_rem = []
         for i, (p_i, st, kind) in enumerate(zip(params["rem"], states["rem"], rem_kinds)):
-            x, st2 = block_apply_decode(p_i, x, st, pos, cfg, kind, opts, (rem_base + i,))
+            x, st2 = block_apply_decode(p_i, x, st, pos, cfg, kind, opts,
+                                        (rem_base + i,), block_tables)
             new_rem.append(st2)
         states = dict(states)
         states["rem"] = new_rem
@@ -284,18 +295,95 @@ def decode_step(params, token, states, pos, cfg: ArchConfig, opts: ModelOptions)
     return logits, states
 
 
-def init_decode_state(cfg: ArchConfig, batch: int, max_len: int):
-    """Zeroed serving state (the dry-run's decode input spec)."""
+def _block_apply_suffix(p, x, state, table, start, cfg: ArchConfig,
+                        opts: ModelOptions, layers: Tuple[int, ...],
+                        ctx_blocks: int):
+    """One pure-attention block over packed suffixes with pooled past KV."""
+    sites = opts.plan.binding("attn", layers)
+    h = norm_apply(p["pre_norm"], x, cfg.norm, cfg.norm_eps)
+    out, state = attn.attn_prefill_paged(
+        p["core"], h, state, table, start, cfg, sites=sites, ctx_blocks=ctx_blocks
+    )
+    x = x + out
+    if _has_mlp(cfg, "attn"):
+        h2 = norm_apply(p["post_norm"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe is not None:
+            mo, _ = moe_mod.moe_apply(p["mlp"], h2, cfg, sites, opts.capacity_factor)
+        else:
+            mo = mlp_apply(p["mlp"], h2, cfg, sites)
+        x = x + mo
+    return x, state
+
+
+def suffix_forward(params, tokens, cfg: ArchConfig, opts: ModelOptions,
+                   states, table, start, ctx_blocks: int):
+    """Prefix-aware packed prefill for pure global-attention stacks.
+
+    Runs the unmatched suffixes (``tokens [B, S_suf]``, right-padded) in
+    one parallel pass against prefix KV already resident in the paged
+    pool, writing the suffix KV into each slot's blocks.  This is the
+    serve engine's prefix-cache admission path; a cold request is just
+    ``start == 0``.  Returns (logits ``[B, S_suf, V]``, new states).
+    """
+    if any(k != "attn" for k in cfg.layer_kinds):
+        raise ValueError(
+            f"suffix_forward needs a pure global-attention stack, got "
+            f"{set(cfg.layer_kinds)}; recurrent/windowed/cross states cannot "
+            "be reconstructed from paged prefix blocks"
+        )
+    from repro.parallel.sharding import shard_act
+
+    x = shard_act(embed_tokens(params["embedding"], tokens, cfg), ("batch", None, None))
+    if "units" in params:
+        pattern = cfg.block_pattern
+
+        def fn(x, xs):
+            unit_params, unit_states = xs
+            new_states = {}
+            for si, _kind in enumerate(pattern):
+                x, st = _block_apply_suffix(
+                    unit_params[f"slot{si}"], x, unit_states[f"slot{si}"],
+                    table, start, cfg, opts, _slot_layers(cfg, si), ctx_blocks
+                )
+                new_states[f"slot{si}"] = st
+            return x, new_states
+
+        x, new_unit_states = jax.lax.scan(fn, x, (params["units"], states["units"]))
+        states = dict(states)
+        states["units"] = new_unit_states
+    if "rem" in params:
+        rem_base = cfg.n_pattern_units * len(cfg.block_pattern)
+        new_rem = []
+        for i, (p_i, st) in enumerate(zip(params["rem"], states["rem"])):
+            x, st2 = _block_apply_suffix(p_i, x, st, table, start, cfg, opts,
+                                         (rem_base + i,), ctx_blocks)
+            new_rem.append(st2)
+        states = dict(states)
+        states["rem"] = new_rem
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = head_apply(params["head"], params["embedding"], x, cfg,
+                        opts.plan.site("lm_head"))
+    return logits, states
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      paged: Optional[Tuple[int, int]] = None):
+    """Zeroed serving state (the dry-run's decode input spec).
+
+    ``paged = (n_blocks, block_size)`` swaps the attn/local caches for
+    shared block pools (``PagedKVCache``, no batch axis — the block table
+    carries slot identity); recurrent and xattn states stay dense-slotted.
+    """
     pattern = cfg.block_pattern
     n_units = cfg.n_pattern_units
     states: Dict[str, Any] = {}
     if n_units:
         units = {}
         for si, kind in enumerate(pattern):
-            one = block_state_init(cfg, kind, batch, max_len)
+            one = block_state_init(cfg, kind, batch, max_len, paged)
             units[f"slot{si}"] = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_units, *a.shape)), one)
         states["units"] = units
     rem_kinds = cfg.layer_kinds[n_units * len(pattern):]
     if rem_kinds:
-        states["rem"] = [block_state_init(cfg, k, batch, max_len) for k in rem_kinds]
+        states["rem"] = [block_state_init(cfg, k, batch, max_len, paged) for k in rem_kinds]
     return states

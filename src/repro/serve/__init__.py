@@ -12,14 +12,24 @@ Public surface:
 * :func:`~repro.serve.prefill.pack_prompts` /
   :func:`~repro.serve.prefill.packed_prefill` — mixed-length prefill packing.
 * :class:`~repro.serve.sampling.SamplerConfig` — greedy / temperature / top-k.
+* :class:`~repro.serve.kv_pool.KVBlockPool` /
+  :class:`~repro.serve.prefix_tree.RadixPrefixTree` — the paged-KV block
+  allocator and the radix-tree prefix cache behind
+  ``ServeConfig(kv_block_size=...)`` (docs/SERVING.md).
 """
 from repro.serve.decode_loop import make_fused_decode, unfused_decode
 from repro.serve.engine import Request, RequestOutput, ServeConfig, ServeEngine
-from repro.serve.prefill import full_seq_packable, pack_prompts, packed_prefill
+from repro.serve.kv_pool import KVBlockPool
+from repro.serve.prefill import (
+    full_seq_packable, pack_prompts, packed_prefill, prefill_paged_suffix,
+)
+from repro.serve.prefix_tree import RadixPrefixTree
 from repro.serve.sampling import GREEDY, SamplerConfig
 
 __all__ = [
     "GREEDY",
+    "KVBlockPool",
+    "RadixPrefixTree",
     "Request",
     "RequestOutput",
     "SamplerConfig",
@@ -29,5 +39,6 @@ __all__ = [
     "make_fused_decode",
     "pack_prompts",
     "packed_prefill",
+    "prefill_paged_suffix",
     "unfused_decode",
 ]

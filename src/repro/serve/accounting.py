@@ -31,6 +31,11 @@ class RequestHardwareReport:
     energy_per_mac_j: float
     # energy attributed per site class (layer-stripped op id), descending
     energy_by_site: Tuple[Tuple[str, float], ...] = ()
+    prompt_tokens: int = 0
+    # prompt tokens served from the paged prefix cache — billed at ZERO
+    # modeled ASTRA latency/energy (their KV was computed, and paid for,
+    # by the request that interned it; docs/SERVING.md §Accounting)
+    cached_prompt_tokens: int = 0
 
     def as_dict(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
@@ -49,17 +54,23 @@ def _simulate_cached(cfg: ArchConfig, chip: AstraChipConfig, seq: int):
 
 
 def request_hardware_report(cfg: ArchConfig, chip: AstraChipConfig,
-                            prompt_len: int, gen_len: int) -> RequestHardwareReport:
+                            prompt_len: int, gen_len: int,
+                            cached_prompt_len: int = 0) -> RequestHardwareReport:
     """Modeled chip cost of one request.
 
     Prefill is one forward over the prompt; each decode step is a forward
     over one token with the context it attends to — approximated (as the
     paper's methodology does) by a single forward at the final sequence
     length, which upper-bounds per-token context.
+
+    ``cached_prompt_len`` prompt tokens hit the paged prefix cache: their
+    KV was reused verbatim, so prefill is billed only over the unmatched
+    suffix (decode still pays for attending to the full context).
     """
     lat = en = macs = 0.0
     sites: Dict[str, float] = {}
-    p_lat, p_en, p_macs, p_sites = _simulate_cached(cfg, chip, max(prompt_len, 1))
+    billed_prompt = max(prompt_len - cached_prompt_len, 1)
+    p_lat, p_en, p_macs, p_sites = _simulate_cached(cfg, chip, billed_prompt)
     lat, en, macs = lat + p_lat, en + p_en, macs + p_macs
     for k, v in p_sites:
         sites[k] = sites.get(k, 0.0) + v
@@ -73,4 +84,6 @@ def request_hardware_report(cfg: ArchConfig, chip: AstraChipConfig,
         for k, v in d_sites:
             sites[k] = sites.get(k, 0.0) + v * scale
     by_site = tuple(sorted(sites.items(), key=lambda kv: -kv[1]))
-    return RequestHardwareReport(lat, en, int(macs), en / max(macs, 1.0), by_site)
+    return RequestHardwareReport(lat, en, int(macs), en / max(macs, 1.0), by_site,
+                                 prompt_tokens=prompt_len,
+                                 cached_prompt_tokens=cached_prompt_len)

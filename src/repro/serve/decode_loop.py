@@ -32,10 +32,12 @@ def make_fused_decode(model: Model):
     the same model shares one jit cache — no recompiles across engines.
     """
 
-    def fused(params, tok, states, pos, key, steps: int, sampler: SamplerConfig):
+    def fused(params, tok, states, pos, key, steps: int, sampler: SamplerConfig,
+              tables=None):
         def step(carry, _):
             tok, states, pos, key = carry
-            logits, states = model.decode(params, tok, states, pos)
+            logits, states = model.decode(params, tok, states, pos,
+                                          block_tables=tables)
             key, sub = jax.random.split(key)
             nxt = sample_next_token(logits, sampler, sub, model.cfg)
             return (nxt, states, pos + 1, key), nxt
@@ -56,7 +58,7 @@ def _jitted_decode(model: Model):
 
 
 def unfused_decode(model: Model, params, tok, states, pos, key, steps: int,
-                   sampler: SamplerConfig) -> Tuple[jax.Array, tuple]:
+                   sampler: SamplerConfig, tables=None) -> Tuple[jax.Array, tuple]:
     """Seed-style reference loop: one ``jit(decode)`` dispatch per token.
 
     Kept as the parity oracle for the fused scan (and as the benchmark
@@ -66,7 +68,7 @@ def unfused_decode(model: Model, params, tok, states, pos, key, steps: int,
     out = []
     pos = jnp.asarray(pos, jnp.int32)
     for _ in range(steps):
-        logits, states = decode(params, tok, states, pos)
+        logits, states = decode(params, tok, states, pos, tables)
         key, sub = jax.random.split(key)
         tok = sample_next_token(logits, sampler, sub, model.cfg)
         out.append(tok)

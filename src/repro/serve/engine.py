@@ -18,6 +18,19 @@ threaded down to the attention cache writes (``models.attention``).
 Inactive slots still ride through the batch (fixed shapes keep one
 compiled program); whatever they compute is discarded, and admission
 overwrites the slot's entire state before it is ever read.
+
+KV memory comes in two layouts (docs/SERVING.md):
+
+* **dense** (``kv_block_size=0``) — one max-length cache per slot, the
+  legacy layout;
+* **paged** (``kv_block_size>0``) — attn/local KV lives in fixed-size
+  blocks drawn from a global pool (``serve/kv_pool.py``) addressed through
+  per-slot block tables, with a radix-tree **prefix cache**
+  (``serve/prefix_tree.py``): a request whose prompt prefix matches
+  interned blocks skips prefill for them (pure global-attention stacks),
+  reuses the KV verbatim, and bills those tokens at zero modeled ASTRA
+  cost.  Inactive slots' table rows point at the scratch block, so their
+  ride-along writes land nowhere readable.
 """
 from __future__ import annotations
 
@@ -33,12 +46,17 @@ import numpy as np
 
 from repro.core.energy import AstraChipConfig
 from repro.core.plan import validate_site_registry
+from repro.models.attention import BlockTables
 from repro.models.model import Model
 from repro.serve.accounting import RequestHardwareReport, request_hardware_report
 from repro.serve.decode_loop import make_fused_decode
-from repro.serve.prefill import pack_prompts, packed_prefill
+from repro.serve.kv_pool import KVBlockPool
+from repro.serve.prefill import pack_prompts, packed_prefill, prefill_paged_suffix
+from repro.serve.prefix_tree import RadixPrefixTree
 from repro.serve.sampling import GREEDY, SamplerConfig, sample_next_token
-from repro.serve.slots import scatter_states
+from repro.serve.slots import paged_scatter_states, scatter_states
+
+_paged_scatter = jax.jit(paged_scatter_states)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +67,14 @@ class ServeConfig:
     sampler: SamplerConfig = GREEDY
     seed: int = 0
     astra_accounting: bool = True
+    # paged KV cache (docs/SERVING.md): 0 keeps the dense per-slot layout;
+    # >0 stores attn/local KV in blocks of this many positions
+    kv_block_size: int = 0
+    # physical pool blocks incl. scratch; 0 = auto (slot floor + 2 slots'
+    # worth of prefix-cache headroom)
+    kv_pool_blocks: int = 0
+    # radix-tree prefix reuse (paged + pure global-attention stacks only)
+    prefix_cache: bool = True
 
 
 @dataclasses.dataclass
@@ -87,12 +113,31 @@ class _Slot:
     remaining: int  # tokens still to generate
     generated: List[np.ndarray]
     t_start: float
+    cached: int = 0  # prompt tokens served from the prefix cache
 
 
 @lru_cache(maxsize=256)
 def _check_site_registry(cfg) -> None:
     """Executed-GEMM-site <-> simulator-op cross-check, once per config."""
     validate_site_registry(cfg)
+
+
+def _kv_deterministic(model: Model) -> bool:
+    """Whether interned KV is a pure function of the token path.
+
+    Prefix reuse replays blocks computed under an earlier batch packing,
+    so every executed GEMM site must run exact or with a *static*
+    (PTQ-calibrated) activation scale — dynamic per-tensor scales depend
+    on what else was packed into the prefill, which would make outputs
+    vary with admission history (DESIGN.md §Numerics and parity).
+    """
+    from repro.core.plan import model_sites
+
+    for s in model_sites(model.cfg):
+        cc = model.plan.resolve(s)
+        if cc.mode != "exact" and cc.act_scale is None:
+            return False
+    return True
 
 
 class ServeEngine:
@@ -117,7 +162,44 @@ class ServeEngine:
         self._order: List[int] = []
         self._next_id = 0
         self._key = jax.random.PRNGKey(config.seed)
-        self._states = model.init_decode_state(config.max_slots, config.max_len)
+        # ----------------------------------------------------- KV layout
+        self._paged = (config.kv_block_size > 0
+                       and any(k in ("attn", "local") for k in cfg.layer_kinds))
+        self._pool: Optional[KVBlockPool] = None
+        self._prefix: Optional[RadixPrefixTree] = None
+        if self._paged:
+            bs = config.kv_block_size
+            w = -(-config.max_len // bs)
+            # pool-capacity arithmetic, checked HERE so admission can never
+            # deadlock mid-decode: even with every other slot full, a new
+            # request must always find its blocks after evicting the tree
+            floor = 1 + config.max_slots * w
+            n_blocks = config.kv_pool_blocks or (floor + 2 * w)
+            if n_blocks < floor:
+                raise ValueError(
+                    f"kv_pool_blocks={n_blocks} cannot back max_slots="
+                    f"{config.max_slots} x ceil(max_len {config.max_len} / "
+                    f"kv_block_size {bs}) = {w} blocks each (+1 scratch): "
+                    f"need >= {floor}"
+                )
+            self._block_size, self._table_width = bs, w
+            self._pool = KVBlockPool(n_blocks, bs)
+            self._slot_blocks: List[List[int]] = [[] for _ in range(config.max_slots)]
+            self._tables_np = np.zeros((config.max_slots, w), np.int32)
+            self._tables_dev = jnp.asarray(self._tables_np)
+            self._tables_dirty = False
+            self._ring_len = (min(config.max_len, cfg.window)
+                              if any(k == "local" for k in cfg.layer_kinds) else 0)
+            # prefix reuse needs every stateful layer's state to be
+            # reconstructible from pooled blocks -> pure global attention
+            self._suffix_path = all(k == "attn" for k in cfg.layer_kinds)
+            if config.prefix_cache and self._suffix_path and _kv_deterministic(model):
+                self._prefix = RadixPrefixTree(bs)
+            self._states = model.init_decode_state(
+                config.max_slots, config.max_len, paged=(n_blocks, bs)
+            )
+        else:
+            self._states = model.init_decode_state(config.max_slots, config.max_len)
         tok_shape = ((config.max_slots, cfg.n_codebooks, 1) if cfg.n_codebooks
                      else (config.max_slots, 1))
         self._cur_tok = jnp.zeros(tok_shape, jnp.int32)
@@ -174,26 +256,110 @@ class ServeEngine:
         slots_ids = free[:n]
         reqs = [self._queue.popleft() for _ in range(n)]
         t_start = time.time()
-        tokens, lengths = pack_prompts([r.prompt for r in reqs], self.model.cfg)
-        last_logits, small_states = packed_prefill(
-            self.model, self.params, tokens, lengths, self.config.max_len,
-            lengths_static=[r.prompt_len for r in reqs],
-            force_scan=self._force_scan_prefill,
-        )
+        if self._paged:
+            last_logits, cached = self._prefill_paged(slots_ids, reqs)
+        else:
+            last_logits = self._prefill_dense(slots_ids, reqs)
+            cached = [0] * n
         self._key, sub = jax.random.split(self._key)
         first = sample_next_token(last_logits, self.config.sampler, sub, self.model.cfg)
         ids = jnp.asarray(slots_ids, jnp.int32)
-        self._states = scatter_states(self._states, small_states, ids)
         self._cur_tok = self._cur_tok.at[ids].set(first)
         first_np = np.asarray(first)  # [n, 1] or [n, C, 1]
         for j, (i, req) in enumerate(zip(slots_ids, reqs)):
             tok0 = first_np[j]  # [1] or [C, 1]
             slot = _Slot(req, pos=req.prompt_len, remaining=req.max_new_tokens - 1,
-                         generated=[tok0], t_start=t_start)
+                         generated=[tok0], t_start=t_start, cached=cached[j])
             if self._hit_eos(req, tok0) or slot.remaining == 0:
                 self._retire(slot)
+                self._release_blocks(i)
             else:
                 self._slots[i] = slot
+
+    def _packed_prefill_small(self, reqs: List[Request]):
+        """Cold prefill of ``reqs`` at batch len(reqs) with dense states."""
+        tokens, lengths = pack_prompts([r.prompt for r in reqs], self.model.cfg)
+        return packed_prefill(
+            self.model, self.params, tokens, lengths, self.config.max_len,
+            lengths_static=[r.prompt_len for r in reqs],
+            force_scan=self._force_scan_prefill,
+        )
+
+    def _prefill_dense(self, slots_ids: List[int], reqs: List[Request]):
+        last_logits, small_states = self._packed_prefill_small(reqs)
+        ids = jnp.asarray(slots_ids, jnp.int32)
+        self._states = scatter_states(self._states, small_states, ids)
+        return last_logits
+
+    def _prefill_paged(self, slots_ids: List[int], reqs: List[Request]):
+        """Allocate block tables (reusing interned prefix blocks), prefill
+        the unmatched work, and intern the new prompt blocks."""
+        bs, w = self._block_size, self._table_width
+        starts: List[int] = []
+        for i, req in zip(slots_ids, reqs):
+            total = -(-(req.prompt_len + req.max_new_tokens) // bs)
+            matched: List[int] = []
+            if self._prefix is not None:
+                # always leave >= 1 suffix token: the last prompt token's
+                # logits seed the first sampled token
+                matched = self._prefix.match(
+                    req.prompt, max_blocks=min((req.prompt_len - 1) // bs, total)
+                )
+                for blk in matched:
+                    self._pool.incref(blk)
+            need = total - len(matched)
+            if need > self._pool.n_free and self._prefix is not None:
+                self._prefix.evict(need - self._pool.n_free, self._pool)
+            blocks = matched + self._pool.alloc(need)
+            self._slot_blocks[i] = blocks
+            self._tables_np[i] = 0
+            self._tables_np[i, : len(blocks)] = blocks
+            starts.append(len(matched) * bs)
+        self._tables_dirty = True
+        rows_dev = jnp.asarray(self._tables_np[slots_ids])
+        if self._suffix_path:
+            suffixes = [r.prompt[..., s:] for r, s in zip(reqs, starts)]
+            tokens, lengths = pack_prompts(suffixes, self.model.cfg)
+            need_blocks = max(
+                -(-(s + int(tokens.shape[-1])) // bs) for s in starts
+            )
+            ctx = 1
+            while ctx < need_blocks:
+                ctx *= 2  # pow2 buckets bound the jit-compile count
+            ctx = min(ctx, w)
+            last_logits, self._states = prefill_paged_suffix(
+                self.model, self.params, tokens, lengths, self._states,
+                rows_dev, jnp.asarray(starts, jnp.int32), ctx,
+            )
+        else:
+            last_logits, small_states = self._packed_prefill_small(reqs)
+            self._states = _paged_scatter(
+                self._states, small_states, jnp.asarray(slots_ids, jnp.int32), rows_dev
+            )
+        if self._prefix is not None:
+            for i, req, start in zip(slots_ids, reqs, starts):
+                nb_full = req.prompt_len // bs
+                if nb_full > start // bs:
+                    self._prefix.insert(req.prompt[..., : nb_full * bs],
+                                        self._slot_blocks[i][:nb_full], self._pool)
+        return last_logits, starts
+
+    def _release_blocks(self, slot_i: int):
+        if not self._paged or not self._slot_blocks[slot_i]:
+            return
+        for blk in self._slot_blocks[slot_i]:
+            self._pool.decref(blk)
+        self._slot_blocks[slot_i] = []
+        # retired rows point back at scratch so the slot's ride-along
+        # decode writes can't corrupt a future owner of these blocks
+        self._tables_np[slot_i] = 0
+        self._tables_dirty = True
+
+    def _block_tables(self) -> BlockTables:
+        if self._tables_dirty:
+            self._tables_dev = jnp.asarray(self._tables_np)
+            self._tables_dirty = False
+        return BlockTables(self._tables_dev, jnp.int32(self._ring_len))
 
     # ------------------------------------------------------------- chunk
     def _decode_chunk(self):
@@ -209,6 +375,7 @@ class ServeEngine:
         toks, (next_tok, states, _, _) = self._fused(
             self.params, self._cur_tok, self._states, jnp.asarray(pos), sub,
             steps=steps, sampler=self.config.sampler,
+            tables=self._block_tables() if self._paged else None,
         )
         self._states = states
         self._cur_tok = next_tok
@@ -220,6 +387,7 @@ class ServeEngine:
             slot.remaining -= steps
             if slot.remaining == 0 or self._hit_eos(slot.req, toks_np[i]):
                 self._retire(slot)
+                self._release_blocks(i)
                 self._slots[i] = None
 
     # ------------------------------------------------------------ retire
@@ -234,9 +402,9 @@ class ServeEngine:
             hits = np.nonzero(gen == slot.req.eos_id)[0]
             if hits.size:
                 gen = gen[: hits[0] + 1]  # keep the EOS, drop overshoot
-        self._complete(slot.req, gen, slot.t_start)
+        self._complete(slot.req, gen, slot.t_start, cached=slot.cached)
 
-    def _complete(self, req: Request, gen, t_start: float):
+    def _complete(self, req: Request, gen, t_start: float, cached: int = 0):
         gen = np.asarray(gen, np.int32)
         if gen.size == 0:
             shape = (req.prompt.shape[0], 0) if req.prompt.ndim == 2 else (0,)
@@ -244,11 +412,25 @@ class ServeEngine:
         hw = None
         if self.config.astra_accounting:
             hw = request_hardware_report(
-                self.model.cfg, self.chip, req.prompt_len, int(gen.shape[-1])
+                self.model.cfg, self.chip, req.prompt_len, int(gen.shape[-1]),
+                cached_prompt_len=cached,
             )
         self._finished[req.id] = RequestOutput(
             req.id, req.prompt, gen, time.time() - t_start, hw
         )
+
+    # ---------------------------------------------------------- prefix stats
+    @property
+    def prefix_stats(self) -> Dict[str, int]:
+        """Radix-tree/pool counters (empty when the prefix cache is off)."""
+        if self._prefix is None:
+            return {}
+        t = self._prefix
+        return {
+            "hits": t.hits, "misses": t.misses, "hit_tokens": t.hit_tokens,
+            "evictions": t.evictions, "interned_blocks": len(t),
+            "free_blocks": self._pool.n_free,
+        }
 
     # -------------------------------------------------------- convenience
     def generate_batch(self, prompts: Sequence[np.ndarray], max_new_tokens: int,

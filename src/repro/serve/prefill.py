@@ -87,10 +87,7 @@ def prefill_full_seq(model: Model, params, tokens: jax.Array, lengths: jax.Array
     if vision_embeds is not None:
         batch["vision_embeds"] = vision_embeds
     logits, states = model.prefill(params, batch, max_len=max_len)
-    b = tokens.shape[0]
-    idx = (lengths - 1).reshape((b,) + (1,) * (logits.ndim - 1)).astype(jnp.int32)
-    last = jnp.take_along_axis(logits, jnp.broadcast_to(idx, (b, 1) + logits.shape[2:]), axis=1)
-    return last, states
+    return _last_logits(logits, lengths), states
 
 
 def prefill_scan(model: Model, params, tokens: jax.Array, lengths: jax.Array,
@@ -118,6 +115,37 @@ def prefill_scan(model: Model, params, tokens: jax.Array, lengths: jax.Array,
         step, (states0, last0), (jnp.arange(s, dtype=jnp.int32), toks_t)
     )
     return last, states
+
+
+def _last_logits(logits: jax.Array, lengths: jax.Array) -> jax.Array:
+    b = logits.shape[0]
+    idx = (lengths - 1).reshape((b,) + (1,) * (logits.ndim - 1)).astype(jnp.int32)
+    return jnp.take_along_axis(logits, jnp.broadcast_to(idx, (b, 1) + logits.shape[2:]), axis=1)
+
+
+def prefill_paged_suffix(model: Model, params, tokens: jax.Array, lengths: jax.Array,
+                         states, rows: jax.Array, starts: jax.Array, ctx_blocks: int):
+    """Prefix-aware admission prefill against the paged KV pool.
+
+    ``tokens [n, S_suf]`` are the admitted requests' *unmatched suffixes*
+    (right-padded), ``rows [n, W]`` their block-table rows, ``starts [n]``
+    the block-aligned prefix lengths already resident in the pool (0 for a
+    cold request — this is also the cold path for pure-attention stacks
+    under paging).  Returns (last_logits, updated pooled states).
+    """
+    model = _drop_free(model)
+    return _suffix_jit(model)(params, tokens, lengths, states, rows, starts,
+                              ctx_blocks=ctx_blocks)
+
+
+@functools.lru_cache(maxsize=64)
+def _suffix_jit(model: Model):
+    def f(params, tokens, lengths, states, rows, starts, ctx_blocks):
+        logits, states = model.prefill_suffix(params, tokens, states, rows,
+                                              starts, ctx_blocks)
+        return _last_logits(logits, lengths), states
+
+    return jax.jit(f, static_argnames=("ctx_blocks",))
 
 
 # jitted per-model wrappers: memoized on the (hashable, frozen) Model so

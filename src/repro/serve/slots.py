@@ -40,6 +40,68 @@ def select_states(new: Dict[str, Any], old: Dict[str, Any], active: jax.Array):
     return out
 
 
+def _block_scatter(pool: jax.Array, dense: jax.Array, rows: jax.Array, axis: int):
+    """Scatter a dense per-request cache into pool blocks.
+
+    ``pool`` [(U,) n_blocks, kv, bs, hd]; ``dense`` [(U,) n, kv, L, hd];
+    ``rows`` [n, nb] physical block ids covering logical blocks 0..nb-1
+    (entries past a slot's allocation point at scratch 0 — those writes
+    collide harmlessly).  ``axis`` is the pool/batch axis (1 for scanned
+    units, 0 for remainder layers).
+    """
+    bs = pool.shape[axis + 2]
+    l = dense.shape[axis + 2]
+    nb = rows.shape[1]
+    pad = nb * bs - l
+    widths = [(0, 0)] * dense.ndim
+    widths[axis + 2] = (0, pad)
+    d = jnp.pad(dense, widths)
+    if axis == 1:
+        u, n, kv, _, hd = d.shape
+        vals = jnp.moveaxis(d.reshape(u, n, kv, nb, bs, hd), 2, 3)
+        return pool.at[:, rows].set(vals.astype(pool.dtype))
+    n, kv, _, hd = d.shape
+    vals = jnp.moveaxis(d.reshape(n, kv, nb, bs, hd), 1, 2)
+    return pool.at[rows].set(vals.astype(pool.dtype))
+
+
+def _scatter_node(big, small, slot_ids: jax.Array, rows: jax.Array, axis: int):
+    from repro.models.attention import KVCache, PagedKVCache
+
+    if isinstance(big, PagedKVCache):
+        assert isinstance(small, KVCache)
+        nb = min(rows.shape[1], -(-small.k.shape[axis + 2] // big.k.shape[axis + 2]))
+        r = rows[:, :nb]
+        return PagedKVCache(_block_scatter(big.k, small.k, r, axis),
+                            _block_scatter(big.v, small.v, r, axis))
+    if isinstance(big, dict):
+        return {k: _scatter_node(big[k], small[k], slot_ids, rows, axis) for k in big}
+    if isinstance(big, (list, tuple)):
+        vals = [_scatter_node(b, s, slot_ids, rows, axis) for b, s in zip(big, small)]
+        return type(big)(*vals) if hasattr(big, "_fields") else type(big)(vals)
+    if axis == 1:
+        return big.at[:, slot_ids].set(small.astype(big.dtype))
+    return big.at[slot_ids].set(small.astype(big.dtype))
+
+
+def paged_scatter_states(big: Dict[str, Any], small: Dict[str, Any],
+                         slot_ids: jax.Array, rows: jax.Array):
+    """Install dense prefilled states into the paged engine state.
+
+    attn/local caches block-scatter into the shared pools via ``rows``
+    (the admitted slots' block-table rows); every other leaf (recurrent,
+    xattn, placeholders) dense-scatters at ``slot_ids`` exactly like
+    :func:`scatter_states`.
+    """
+    out: Dict[str, Any] = {}
+    if "units" in big:
+        out["units"] = _scatter_node(big["units"], small["units"], slot_ids, rows, 1)
+    if "rem" in big:
+        out["rem"] = [_scatter_node(b, s, slot_ids, rows, 0)
+                      for b, s in zip(big["rem"], small["rem"])]
+    return out
+
+
 def scatter_states(big: Dict[str, Any], small: Dict[str, Any], slot_ids: jax.Array):
     """Install ``small`` (batch k) into ``big`` (batch B) at ``slot_ids [k]``.
 

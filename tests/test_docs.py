@@ -1,0 +1,123 @@
+"""Docs-consistency checks: the documentation must not drift from the code.
+
+* Every fenced ```json snippet in docs/PLANS.md / README.md must build a
+  valid ``ExecutionPlan`` via ``from_spec``, and every glob rule in it
+  must match at least one real site in the model zoo.
+* Every inline-code site id quoted anywhere in the docs
+  (``L3.attn.qk``-shaped, or ``lm_head``) must exist in some zoo config's
+  ``model_sites``.
+* Every relative markdown link in every *.md must resolve to a file.
+"""
+import json
+import os
+import re
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.plan import ExecutionPlan, _match, model_sites
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_DOC_FILES = [
+    os.path.join(ROOT, name)
+    for name in ("README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md",
+                 "docs/SERVING.md", "docs/PLANS.md")
+    if os.path.exists(os.path.join(ROOT, name))
+]
+_PLAN_DOCS = [p for p in _DOC_FILES if p.endswith(("PLANS.md", "README.md"))]
+
+
+def _read(path):
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+# externally sourced material (arxiv extractions, exemplar snippets) may
+# reference assets that were never retrieved — not ours to fix
+_LINKCHECK_EXCLUDE = ("PAPER.md", "PAPERS.md", "SNIPPETS.md")
+
+
+def _all_md_files():
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", "artifacts", ".github")]
+        out += [os.path.join(dirpath, f) for f in filenames
+                if f.endswith(".md") and f not in _LINKCHECK_EXCLUDE]
+    return out
+
+
+def _fenced_blocks(text, lang):
+    return re.findall(rf"```{lang}\n(.*?)```", text, flags=re.S)
+
+
+@pytest.fixture(scope="module")
+def zoo_sites():
+    """Union of every executed GEMM site across the full (non-reduced) zoo."""
+    sites = set()
+    for cfg in ARCHS.values():
+        sites.update(model_sites(cfg))
+    return sites
+
+
+# ------------------------------------------------------------ plan snippets
+def test_quoted_plan_json_snippets_build_plans(zoo_sites):
+    checked = 0
+    for path in _PLAN_DOCS:
+        for block in _fenced_blocks(_read(path), "json"):
+            spec = json.loads(block)  # must be valid JSON
+            plan = ExecutionPlan.from_spec(spec)
+            for pattern, _cc in plan.rules:
+                assert any(_match(pattern, s) for s in zoo_sites), (
+                    f"{os.path.relpath(path, ROOT)}: plan rule {pattern!r} "
+                    "matches no site in the model zoo"
+                )
+            checked += 1
+    assert checked >= 2, "expected plan JSON snippets in docs/PLANS.md"
+
+
+def test_inline_plan_specs_in_shell_snippets(zoo_sites):
+    """--plan '<json>' examples inside sh blocks must be valid specs too."""
+    checked = 0
+    for path in _PLAN_DOCS:
+        for spec in re.findall(r"--plan '(\{.*?\})'", _read(path)):
+            plan = ExecutionPlan.from_spec(spec)
+            for pattern, _cc in plan.rules:
+                assert any(_match(pattern, s) for s in zoo_sites)
+            checked += 1
+    assert checked >= 1
+
+
+# ---------------------------------------------------------------- site ids
+_SITE_RE = re.compile(r"^(?:L\d+\.[a-z]+\.[a-z0-9_]+|lm_head)$")
+
+
+def test_quoted_site_ids_exist(zoo_sites):
+    checked = 0
+    for path in _DOC_FILES:
+        for span in re.findall(r"`([^`\n]+)`", _read(path)):
+            if _SITE_RE.match(span):
+                assert span in zoo_sites, (
+                    f"{os.path.relpath(path, ROOT)} quotes site {span!r} "
+                    "which no zoo config executes"
+                )
+                checked += 1
+    assert checked >= 3, "expected concrete site ids quoted in the docs"
+
+
+# ------------------------------------------------------------------- links
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def test_no_dead_relative_links():
+    dead = []
+    for path in _all_md_files():
+        base = os.path.dirname(path)
+        for target in _LINK_RE.findall(_read(path)):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if rel and not os.path.exists(os.path.join(base, rel)):
+                dead.append(f"{os.path.relpath(path, ROOT)} -> {target}")
+    assert not dead, "dead relative links:\n" + "\n".join(dead)

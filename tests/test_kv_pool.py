@@ -1,0 +1,204 @@
+"""Host-side paged-KV bookkeeping: block pool + radix prefix tree.
+
+No JAX here — these pin the allocator/refcount/eviction protocol the
+serve engine builds on (docs/SERVING.md).  The property test drives
+random interleaved admit/finish/intern/evict sequences and checks blocks
+are never leaked or double-freed.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serve.kv_pool import KVBlockPool
+from repro.serve.prefix_tree import RadixPrefixTree
+
+
+# ------------------------------------------------------------------ pool
+def test_pool_alloc_free_roundtrip():
+    pool = KVBlockPool(n_blocks=8, block_size=4)
+    assert pool.n_free == 7  # block 0 is scratch
+    a = pool.alloc(3)
+    assert len(set(a)) == 3 and 0 not in a
+    assert pool.n_free == 4 and pool.n_live == 3
+    for b in a:
+        pool.decref(b)
+    assert pool.n_free == 7 and pool.n_live == 0
+
+
+def test_pool_refcount_shared_block():
+    pool = KVBlockPool(8, 4)
+    [b] = pool.alloc(1)
+    pool.incref(b)  # second holder
+    pool.decref(b)
+    assert pool.n_free == 6  # still held
+    pool.decref(b)
+    assert pool.n_free == 7
+
+
+def test_pool_errors():
+    pool = KVBlockPool(4, 2)
+    with pytest.raises(RuntimeError):
+        pool.alloc(4)  # only 3 allocatable
+    [b] = pool.alloc(1)
+    pool.decref(b)
+    with pytest.raises(ValueError):
+        pool.decref(b)  # double free
+    with pytest.raises(ValueError):
+        pool.incref(b)  # incref on free block
+    with pytest.raises(ValueError):
+        pool.incref(0)  # scratch is not ref-counted
+    with pytest.raises(ValueError):
+        KVBlockPool(1, 4)
+    with pytest.raises(ValueError):
+        KVBlockPool(8, 0)
+
+
+# ------------------------------------------------------------------ tree
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_tree_match_is_block_aligned():
+    pool = KVBlockPool(16, 4)
+    tree = RadixPrefixTree(block_size=4)
+    blocks = pool.alloc(2)
+    tree.insert(_toks(*range(8)), blocks, pool)
+    assert [pool.ref(b) for b in blocks] == [2, 2]  # slot + tree
+    # full match, capped match, partial-block divergence (no match there)
+    assert tree.match(_toks(*range(8)), max_blocks=2) == blocks
+    assert tree.match(_toks(*range(8)), max_blocks=1) == blocks[:1]
+    assert tree.match(_toks(0, 1, 2, 3, 9, 9, 9, 9), max_blocks=2) == blocks[:1]
+    assert tree.match(_toks(9, 1, 2, 3), max_blocks=1) == []
+    # 7 tokens only cover one full block
+    assert tree.match(_toks(*range(7)), max_blocks=2) == blocks[:1]
+
+
+def test_tree_insert_dedups_existing_prefix():
+    pool = KVBlockPool(16, 4)
+    tree = RadixPrefixTree(4)
+    first = pool.alloc(2)
+    dup = pool.alloc(2)
+    assert tree.insert(_toks(*range(8)), first, pool) == 2
+    # same tokens, different blocks: nothing adopted, originals kept
+    assert tree.insert(_toks(*range(8)), dup, pool) == 0
+    assert tree.match(_toks(*range(8)), 2) == first
+    assert [pool.ref(b) for b in dup] == [1, 1]  # still slot-owned only
+
+
+def test_tree_evict_lru_leaves_only():
+    pool = KVBlockPool(16, 2)
+    tree = RadixPrefixTree(2)
+    a = pool.alloc(2)  # chain A: two nodes
+    b = pool.alloc(1)  # chain B: one node
+    tree.insert(_toks(0, 1, 2, 3), a, pool)
+    tree.insert(_toks(9, 9), b, pool)
+    for blk in a + b:  # slots finish: only tree refs remain
+        pool.decref(blk)
+    tree.match(_toks(9, 9), 1)  # touch B -> A's leaf is LRU
+    freed = tree.evict(1, pool)
+    assert freed == 1
+    assert tree.match(_toks(0, 1, 2, 3), 2) == a[:1]  # leaf gone, parent kept
+    # evicting more drains the rest, deepest-first, and frees the blocks
+    assert tree.evict(10, pool) == 2
+    assert pool.n_free == 15
+    assert len(tree) == 0
+
+
+def test_tree_pinned_blocks_are_not_evictable():
+    pool = KVBlockPool(16, 2)
+    tree = RadixPrefixTree(2)
+    a = pool.alloc(1)
+    tree.insert(_toks(0, 1), a, pool)
+    # a live slot still holds the block (ref 2) -> nothing to evict
+    assert tree.evict(1, pool) == 0
+    pool.decref(a[0])
+    assert tree.evict(1, pool) == 1
+
+
+def test_tree_multi_codebook_keys():
+    pool = KVBlockPool(16, 2)
+    tree = RadixPrefixTree(2)
+    grid = np.arange(8, dtype=np.int32).reshape(2, 4)  # [C=2, S=4]
+    blocks = pool.alloc(2)
+    tree.insert(grid, blocks, pool)
+    assert tree.match(grid, 2) == blocks
+    other = grid.copy()
+    other[1, 1] = 99  # differs inside the first block
+    assert tree.match(other, 2) == []
+
+
+def test_tree_never_interns_scratch():
+    pool = KVBlockPool(16, 2)
+    tree = RadixPrefixTree(2)
+    assert tree.insert(_toks(0, 1, 2, 3), [0, 0], pool) == 0
+    assert len(tree) == 0
+
+
+# -------------------------------------------------------------- property
+@settings(max_examples=30)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=40))
+def test_random_admit_finish_never_leaks_or_double_frees(ops):
+    """Engine-shaped usage: interleaved admit (match + incref + evict +
+    alloc + intern) and finish (decref) must keep every block's refcount
+    equal to holders(tree + live slots), and draining everything must
+    return the pool to fully free."""
+    bs, w, n_slots = 4, 4, 3
+    pool = KVBlockPool(1 + n_slots * w + 2, bs)
+    tree = RadixPrefixTree(bs)
+    rng = np.random.default_rng(1234)
+    live = {}  # slot id -> list of blocks
+    interned = {}  # block -> True (mirror of tree adoption)
+
+    def rebuild_interned():
+        interned.clear()
+        stack = [tree.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node is not tree.root:
+                interned[node.block] = True
+
+    def check_refs():
+        holders = {}
+        for blocks in live.values():
+            for b in blocks:
+                holders[b] = holders.get(b, 0) + 1
+        for b in interned:
+            holders[b] = holders.get(b, 0) + 1
+        for b in range(1, pool.n_blocks):
+            assert pool.ref(b) == holders.get(b, 0), f"block {b} refcount drift"
+
+    next_slot = 0
+    for op in ops:
+        if op <= 3 and len(live) < n_slots:  # admit
+            prompt_len = int(rng.integers(1, w * bs - 1))
+            total = -(-(prompt_len + 1) // bs)
+            prompt = rng.integers(0, 3, prompt_len).astype(np.int32)
+            matched = tree.match(prompt, max_blocks=min((prompt_len - 1) // bs, total))
+            for b in matched:
+                pool.incref(b)
+            need = total - len(matched)
+            if need > pool.n_free:
+                tree.evict(need - pool.n_free, pool)
+                rebuild_interned()
+            blocks = matched + pool.alloc(need)
+            live[next_slot] = blocks
+            nb_full = prompt_len // bs
+            if nb_full > len(matched):
+                tree.insert(prompt[: nb_full * bs], blocks[:nb_full], pool)
+                rebuild_interned()
+            next_slot += 1
+        elif live:  # finish the oldest slot
+            sid = min(live)
+            for b in live.pop(sid):
+                pool.decref(b)
+        check_refs()
+
+    for blocks in live.values():
+        for b in blocks:
+            pool.decref(b)
+    live.clear()
+    tree.evict(pool.n_blocks, pool)
+    assert pool.n_free == pool.n_blocks - 1, "leaked blocks"
+    assert len(tree) == 0

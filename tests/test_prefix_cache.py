@@ -1,0 +1,223 @@
+"""Paged KV cache + radix-tree prefix reuse in the serve engine.
+
+The load-bearing claims (docs/SERVING.md):
+
+* paging is invisible to outputs: a paged engine is token-identical to
+  the dense engine on every arch family (global, windowed ring, MoE,
+  codebooks/xattn), including fused-vs-unfused decode with block tables;
+* prefix hits (full, partial, divergent) reproduce cold-prefill tokens
+  exactly and are reported in the engine stats / hardware accounting;
+* shared blocks survive divergence (copy-on-write at block granularity)
+  and ref-counted LRU eviction under pool pressure never corrupts a
+  live or re-admitted request.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.attention import BlockTables
+from repro.models.model import Model
+from repro.models.transformer import ModelOptions, suffix_forward
+from repro.serve import (
+    GREEDY, ServeConfig, ServeEngine, make_fused_decode, unfused_decode,
+)
+
+
+def _model(arch="stablelm-1.6b", **red):
+    cfg = dataclasses.replace(get_arch(arch).reduced(**red), dtype="float32")
+    return Model(cfg, ModelOptions())
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (cfg.n_codebooks,) if cfg.n_codebooks else ()
+    return [rng.integers(0, cfg.vocab, shape + (l,), dtype=np.int32) for l in lens]
+
+
+def _dense_oracle(model, params, prompts, gen, max_len, chunk=4):
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_slots=len(prompts), max_len=max_len,
+                                  chunk_steps=chunk, astra_accounting=False))
+    return [o.tokens for o in eng.generate_batch(prompts, gen)]
+
+
+@pytest.fixture(scope="module")
+def stablelm():
+    model = _model()
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ------------------------------------------------------- paged == dense
+def test_paged_matches_dense_mixed_lengths(stablelm):
+    model, params = stablelm
+    prompts = _prompts(model.cfg, (6, 11, 16))
+    refs = _dense_oracle(model, params, prompts, 8, 32)
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=3, max_len=32, chunk_steps=4, kv_block_size=8))
+    outs = eng.generate_batch(prompts, 8)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o.tokens, r)
+
+
+@pytest.mark.parametrize("red,max_len", [({"window": 8}, 24), ({}, 20)],
+                         ids=["ring", "window>max_len"])
+def test_paged_windowed_matches_dense(red, max_len, key):
+    """Sliding-window ring through block tables (incl. the scan-prefill
+    regime where the window exceeds the pre-allocated max_len)."""
+    model = _model("recurrentgemma-2b", **red)
+    params = model.init(key)
+    prompts = _prompts(model.cfg, (5, 9))
+    refs = _dense_oracle(model, params, prompts, 6, max_len, chunk=3)
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=2, max_len=max_len, chunk_steps=3, kv_block_size=4))
+    assert not eng._suffix_path and eng._prefix is None  # recurrent: no reuse
+    for o, r in zip(eng.generate_batch(prompts, 6), refs):
+        np.testing.assert_array_equal(o.tokens, r)
+
+
+def test_fused_matches_unfused_with_tables(stablelm):
+    """The scan-fused decode and the per-dispatch loop agree through the
+    block-table indirection (non-block-aligned max_len on purpose)."""
+    model, params = stablelm
+    b, bs, max_len = 2, 8, 20
+    w = -(-max_len // bs)
+    states = model.init_decode_state(b, max_len, paged=(1 + b * w, bs))
+    table = jnp.asarray([[1 + i * w + j for j in range(w)] for i in range(b)], jnp.int32)
+    tables = BlockTables(table, jnp.int32(0))
+    key = jax.random.PRNGKey(1)
+    tok = jax.random.randint(key, (b, 1), 0, model.cfg.vocab, jnp.int32)
+    pos = jnp.full((b,), 5, jnp.int32)
+    fused = make_fused_decode(model)
+    tf, _ = fused(params, tok, states, pos, key, steps=6, sampler=GREEDY, tables=tables)
+    tu, _ = unfused_decode(model, params, tok, states, pos, key, 6, GREEDY, tables=tables)
+    np.testing.assert_array_equal(np.asarray(tf), np.asarray(tu))
+
+
+# ------------------------------------------------------------ prefix hits
+def test_prefix_hit_and_partial_hit_match_cold(stablelm):
+    model, params = stablelm
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, model.cfg.vocab, 16, dtype=np.int32)
+    extended = np.concatenate([shared, rng.integers(0, model.cfg.vocab, 5, dtype=np.int32)])
+    [ref_full], [ref_ext] = (_dense_oracle(model, params, [p], 6, 48)
+                             for p in (shared, extended))
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=2, max_len=48, chunk_steps=4, kv_block_size=8))
+    [cold] = eng.generate_batch([shared], 6)
+    assert eng.prefix_stats["hit_tokens"] == 0
+    [hit] = eng.generate_batch([shared], 6)  # capped full hit (8 of 16)
+    [part] = eng.generate_batch([extended], 6)  # partial hit (16 of 21)
+    np.testing.assert_array_equal(cold.tokens, ref_full)
+    np.testing.assert_array_equal(hit.tokens, ref_full)
+    np.testing.assert_array_equal(part.tokens, ref_ext)
+    stats = eng.prefix_stats
+    assert stats["hits"] == 2 and stats["hit_tokens"] == 8 + 16
+    # prefix-hit tokens are billed at zero modeled ASTRA cost
+    assert hit.hardware.cached_prompt_tokens == 8
+    assert part.hardware.cached_prompt_tokens == 16
+    assert cold.hardware.cached_prompt_tokens == 0
+    assert hit.hardware.energy_j < cold.hardware.energy_j
+
+
+def test_divergence_is_copy_on_write(stablelm):
+    """Two requests sharing a block-aligned prefix then diverging must
+    each match their cold run, and the interned prefix must survive."""
+    model, params = stablelm
+    rng = np.random.default_rng(4)
+    shared = rng.integers(0, model.cfg.vocab, 16, dtype=np.int32)
+    div_a = np.concatenate([shared, rng.integers(0, model.cfg.vocab, 7, dtype=np.int32)])
+    div_b = np.concatenate([shared, rng.integers(0, model.cfg.vocab, 5, dtype=np.int32)])
+    refs = {k: _dense_oracle(model, params, [p], 6, 48)[0]
+            for k, p in (("s", shared), ("a", div_a), ("b", div_b))}
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=2, max_len=48, chunk_steps=4, kv_block_size=8))
+    eng.generate_batch([shared], 4)  # prime: interns the shared blocks
+    outs = eng.generate_batch([div_a, div_b], 6)  # batched divergent hits
+    np.testing.assert_array_equal(outs[0].tokens, refs["a"])
+    np.testing.assert_array_equal(outs[1].tokens, refs["b"])
+    # the sharers wrote only private blocks: a re-hit still matches cold
+    [again] = eng.generate_batch([shared], 6)
+    np.testing.assert_array_equal(again.tokens, refs["s"])
+
+
+def test_eviction_under_pool_pressure(stablelm):
+    """Floor-sized pool (zero cache headroom): every admit must evict
+    interned blocks, and outputs stay token-identical throughout."""
+    model, params = stablelm
+    rng = np.random.default_rng(5)
+    floor = 1 + 2 * (48 // 8)
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=2, max_len=48, chunk_steps=4, kv_block_size=8,
+        kv_pool_blocks=floor))
+    for trial in range(7):
+        p = rng.integers(0, model.cfg.vocab, 17 + trial, dtype=np.int32)
+        [o] = eng.generate_batch([p], 5)
+        [ref] = _dense_oracle(model, params, [p], 5, 48)
+        np.testing.assert_array_equal(o.tokens, ref)
+    assert eng.prefix_stats["evictions"] > 0
+    # no leak: with both slots idle, live blocks are all tree-interned
+    assert eng._pool.n_live == eng.prefix_stats["interned_blocks"]
+
+
+def test_moe_arch_takes_suffix_path(key):
+    """Pure-attention MoE stacks are prefix-cache eligible (drop-free)."""
+    model = _model("granite-moe-1b-a400m")
+    params = model.init(key)
+    [p] = _prompts(model.cfg, (14,), seed=6)
+    [ref] = _dense_oracle(model, params, [p], 4, 24)
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=1, max_len=24, chunk_steps=4, kv_block_size=4))
+    assert eng._suffix_path and eng._prefix is not None
+    [cold] = eng.generate_batch([p], 4)
+    [hit] = eng.generate_batch([p], 4)
+    np.testing.assert_array_equal(cold.tokens, ref)
+    np.testing.assert_array_equal(hit.tokens, ref)
+    assert eng.prefix_stats["hit_tokens"] > 0
+
+
+def test_prefix_reuse_requires_deterministic_kv(stablelm):
+    """Uncalibrated dynamic-scale plans (int8/sc) must auto-disable
+    reuse: their per-tensor act scales depend on batch packing, so
+    replayed KV would make outputs admission-history-dependent.
+    Calibration (static per-site scales) re-enables it."""
+    model, params = stablelm
+    cfg = ServeConfig(max_slots=1, max_len=32, kv_block_size=8)
+    assert ServeEngine(model, params, cfg)._prefix is not None  # exact: on
+    int8 = model.with_plan("int8")
+    assert ServeEngine(int8, params, cfg)._prefix is None  # dynamic scales: off
+    [p] = _prompts(model.cfg, (10,), seed=8)
+    calibrated = int8.calibrate(params, {"tokens": p[None]})
+    assert ServeEngine(calibrated, params, cfg)._prefix is not None
+
+
+# ---------------------------------------------------------------- edges
+def test_gen_len_zero_with_prefix_cache(stablelm):
+    model, params = stablelm
+    [p] = _prompts(model.cfg, (12,), seed=7)
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=1, max_len=32, kv_block_size=8))
+    [out] = eng.generate_batch([p], 0)
+    assert out.gen_len == 0
+    assert eng._pool.n_live == 0  # never took blocks
+
+
+def test_pool_capacity_validated_at_construction(stablelm):
+    model, params = stablelm
+    with pytest.raises(ValueError, match="kv_pool_blocks"):
+        ServeEngine(model, params, ServeConfig(
+            max_slots=2, max_len=32, kv_block_size=8, kv_pool_blocks=6))
+
+
+def test_suffix_forward_rejects_stateful_stacks(key):
+    model = _model("recurrentgemma-2b", window=8)
+    params = model.init(key)
+    states = model.init_decode_state(1, 16, paged=(9, 4))
+    with pytest.raises(ValueError, match="pure global-attention"):
+        suffix_forward(params, jnp.zeros((1, 4), jnp.int32), model.cfg,
+                       model.opts, states, jnp.zeros((1, 4), jnp.int32),
+                       jnp.zeros((1,), jnp.int32), 4)

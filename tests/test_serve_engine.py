@@ -76,6 +76,25 @@ def test_mixed_lengths_match_per_request(arch, key):
         np.testing.assert_array_equal(o.tokens, ref)
 
 
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "recurrentgemma-2b"])
+def test_mixed_lengths_match_per_request_paged(arch, key):
+    """Paged variant of the continuous-batching parity claim: the block
+    pool + block-table indirection must be invisible to outputs (see
+    tests/test_prefix_cache.py for the prefix-reuse claims)."""
+    model = _model(arch, **({"window": 8} if get_arch(arch).window else {}))
+    params = model.init(key)
+    lens = (6, 11, 16)
+    prompts = _prompts(model.cfg, lens)
+    max_len = max(lens) + 10
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_slots=3, max_len=max_len, chunk_steps=4,
+                                  kv_block_size=8))
+    outs = eng.generate_batch(prompts, max_new_tokens=8)
+    for p, o in zip(prompts, outs):
+        ref = _per_request_greedy(model, params, p, 8, max_len)
+        np.testing.assert_array_equal(o.tokens, ref)
+
+
 def test_window_larger_than_max_len(key):
     """Ring window > pre-allocated max_len: prefill must take the scan
     path (the full-seq pass emits window-sized rings that would not fit
