@@ -32,6 +32,7 @@ SECTIONS = {
     "roofline_compare": roofline.compare,   # SPerf: baseline vs optimized bounds
     "serve_throughput": serve_throughput.run,  # ISSUE 1: fused vs per-step decode
     "kv_cache": serve_throughput.run_kv_cache,  # ISSUE 3: shared-prefix TTFT
+    "scheduler": serve_throughput.run_scheduler,  # ISSUE 4: chunked-prefill ITL
 }
 
 

@@ -8,8 +8,11 @@ prints the modeled photonic hardware cost per request (attributed per
 GEMM site).  Any flag of ``repro.launch.serve`` works — notably
 ``--plan mixed --calibrate`` for the per-site execution-plan path
 (int8 attention qk/pv + stochastic-stream projections, PTQ-calibrated;
-docs/PLANS.md) and ``--kv-block-size`` / ``--no-prefix-cache`` for the
-paged KV cache with radix-tree prefix reuse (docs/SERVING.md).
+docs/PLANS.md), ``--kv-block-size`` / ``--no-prefix-cache`` for the
+paged KV cache with radix-tree prefix reuse (docs/SERVING.md), and
+``--prefill-chunk-tokens`` for the chunked-prefill scheduler that
+interleaves prompt chunks with decode so long prompts never stall
+in-flight requests (docs/SERVING.md §Scheduling).
 
   PYTHONPATH=src python examples/serve_astra.py [--arch stablelm-1.6b]
 """

@@ -22,6 +22,14 @@ attention KV lives in fixed-size pooled blocks with radix-tree prefix
 reuse on pure global-attention stacks (``--no-prefix-cache`` disables the
 reuse; ``--kv-block-size 0`` restores the dense per-slot layout).
 
+``--prefill-chunk-tokens N`` turns on the chunked-prefill scheduler
+(docs/SERVING.md §Scheduling): prompts are prefilled in bounded chunks
+interleaved with decode chunks under a shared per-round token budget of
+``N``, so admitting a long prompt never stalls in-flight decode for more
+than one bounded dispatch (0 = blocking full-prompt admission).  Each
+request reports measured queue wait / TTFT / inter-token latency next to
+the modeled chip cost.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
       --batch 4 --prompt-len 32 --gen 16 --mode int8 --compare-exact
@@ -114,7 +122,8 @@ def _run_engine(model, params, prompts, args, sampler):
     cfg = ServeConfig(max_slots=args.max_slots or len(prompts), max_len=max_len,
                       chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed,
                       kv_block_size=args.kv_block_size,
-                      prefix_cache=not args.no_prefix_cache)
+                      prefix_cache=not args.no_prefix_cache,
+                      prefill_chunk_tokens=args.prefill_chunk_tokens)
     # warm run on a throwaway engine: the jitted prefill/chunk programs are
     # memoized per model, so the timed run below measures serving, not XLA
     # compilation
@@ -125,7 +134,7 @@ def _run_engine(model, params, prompts, args, sampler):
     t0 = time.time()
     outs = engine.generate_batch(prompts, args.gen)
     dt = max(time.time() - t0, 1e-9)
-    return outs, sum(o.gen_len for o in outs) / dt, engine.prefix_stats
+    return outs, sum(o.gen_len for o in outs) / dt, engine
 
 
 def _parse_plan(ap: argparse.ArgumentParser, spec: str) -> ExecutionPlan:
@@ -155,6 +164,12 @@ def _validate_kv_flags(ap: argparse.ArgumentParser, args) -> None:
             "--no-prefix-cache only applies to the paged KV cache; it is "
             "meaningless with --kv-block-size 0 (dense layout has no "
             "prefix cache to disable)"
+        )
+    if args.prefill_chunk_tokens < 0:
+        ap.error(
+            f"--prefill-chunk-tokens: {args.prefill_chunk_tokens} is "
+            "negative; pass a per-round token budget (docs/SERVING.md "
+            "§Scheduling) or 0 for blocking full-prompt admission"
         )
 
 
@@ -188,6 +203,10 @@ def main(argv=None):
                          "(docs/SERVING.md); 0 = dense per-slot caches")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable radix-tree prefix reuse (paged mode only)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="chunked-prefill scheduler token budget per round "
+                         "(docs/SERVING.md §Scheduling); 0 = blocking "
+                         "full-prompt admission")
     ap.add_argument("--compare-exact", action="store_true",
                     help="also run exact mode and report token agreement")
     ap.add_argument("--seed", type=int, default=0)
@@ -214,14 +233,27 @@ def main(argv=None):
         cal_tokens, _ = pack_prompts(prompts, cfg)
         model = model.calibrate(params, {"tokens": cal_tokens})
         print(f"calibrated {len(model.plan.act_scales)} site activation scales")
-    outs, tps, prefix_stats = _run_engine(model, params, prompts, args, sampler)
+    outs, tps, engine = _run_engine(model, params, prompts, args, sampler)
     print(f"[{plan_label}] {len(outs)} requests (prompt lens {sorted(set(lengths))}), "
           f"{args.gen} new tokens each: {tps:.1f} tok/s")
+    prefix_stats = engine.prefix_stats
     if prefix_stats:
         print(f"  prefix cache: {prefix_stats['hits']} hits / "
               f"{prefix_stats['misses']} misses, "
               f"{prefix_stats['hit_tokens']} prompt tokens reused, "
               f"{prefix_stats['evictions']} evictions")
+    sched = engine.scheduler_stats
+    if sched.get("active"):
+        print(f"  scheduler: budget {sched['token_budget']} tok/round, "
+              f"{sched['prefill_chunks']} prefill chunks / "
+              f"{sched['prefill_tokens']} tokens over {sched['rounds']} rounds "
+              f"({sched['starved_rounds']} decode-saturated)")
+    timings = [o.timing for o in outs if o.timing is not None]
+    if timings:
+        print(f"  latency: queue {np.mean([t.queue_time_s for t in timings]) * 1e3:.1f} ms avg, "
+              f"TTFT {np.mean([t.ttft_s for t in timings]) * 1e3:.1f} ms avg, "
+              f"ITL {np.mean([t.mean_itl_s for t in timings]) * 1e3:.2f} ms avg / "
+              f"{max(t.max_itl_s for t in timings) * 1e3:.2f} ms max")
     site_energy: dict = {}
     for o in outs:
         hw = o.hardware
@@ -241,7 +273,7 @@ def main(argv=None):
 
     all_exact = all(model.plan.resolve(s).mode == "exact" for s in model_sites(cfg))
     if args.compare_exact and not all_exact:
-        outs_ref, _, _ = _run_engine(base_model, params, prompts, args, sampler)
+        outs_ref, _, _eng = _run_engine(base_model, params, prompts, args, sampler)
         agree = np.mean([
             np.mean(o.tokens == r.tokens) for o, r in zip(outs, outs_ref)
         ])

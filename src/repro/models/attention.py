@@ -7,7 +7,8 @@ Three entry points per block:
     (global: [B, kv, S_max, hd] with position write; local: ring buffer of
     ``window``; cross: static frontend KV, read-only).
   * ``attn_prefill_paged`` — multi-token suffix prefill against a *paged*
-    cache with past context (the serve engine's prefix-cache path).
+    cache with past context (the serve engine's prefix-cache and
+    chunked-prefill paths; suffixes may start at any in-block offset).
 
 Serving caches come in two layouts (docs/SERVING.md):
   * dense ``KVCache`` — one max-length buffer per slot (the legacy layout);
@@ -365,26 +366,29 @@ def attn_decode(
     return out, KVCache(k, v)
 
 
-def _paged_write_blocks(pool: jax.Array, table: jax.Array, start_blk: jax.Array,
-                        new: jax.Array) -> jax.Array:
-    """Scatter whole blocks into the pool.
+def _paged_write_span(pool: jax.Array, table: jax.Array, start: jax.Array,
+                      new: jax.Array) -> jax.Array:
+    """Scatter a contiguous position span into the pool.
 
-    pool [n_blocks, kv, bs, hd]; new [B, kv, S_pad, hd] with S_pad a
-    multiple of bs, landing at each row's blocks ``start_blk + j``.
-    Indices past the table width (packed-prefill overrun into another
-    slot's padding region) are redirected to the scratch sink — those
-    positions are either overwritten by decode before any read exposes
+    pool [n_blocks, kv, bs, hd]; new [B, kv, S, hd] landing at each row's
+    logical positions ``start[b] + t`` — ``start`` may point anywhere
+    inside a block (the chunked-prefill scheduler resumes mid-block), so
+    the write is per token position, not per block.  Positions past the
+    table width (packed-prefill overrun into another slot's padding
+    region) are redirected to the scratch sink — those positions are
+    either overwritten by a later chunk or decode before any read exposes
     them, or never readable at all.
     """
-    b, kvh, s_pad, hd = new.shape
+    b, kvh, s, hd = new.shape
     bs = pool.shape[2]
-    nb = s_pad // bs
     w = table.shape[1]
-    idx = start_blk[:, None] + jnp.arange(nb)[None, :]  # [B, nb] logical
-    pb = jnp.take_along_axis(table, jnp.minimum(idx, w - 1), axis=1)
-    pb = jnp.where(idx < w, pb, 0)  # overrun -> scratch
-    blocks = jnp.moveaxis(new.reshape(b, kvh, nb, bs, hd), 1, 2)  # [B, nb, kv, bs, hd]
-    return pool.at[pb].set(blocks.astype(pool.dtype))
+    pos = start[:, None] + jnp.arange(s)[None, :]  # [B, S] logical positions
+    blk = pos // bs
+    pb = jnp.take_along_axis(table, jnp.minimum(blk, w - 1), axis=1)
+    pb = jnp.where(blk < w, pb, 0)  # overrun -> scratch
+    vals = jnp.moveaxis(new, 1, 2).reshape(b * s, kvh, hd)
+    return pool.at[pb.reshape(-1), :, (pos % bs).reshape(-1)].set(
+        vals.astype(pool.dtype))
 
 
 def attn_prefill_paged(
@@ -392,7 +396,7 @@ def attn_prefill_paged(
     x: jax.Array,  # [B, S_suf, D] packed suffixes
     cache: PagedKVCache,
     table: jax.Array,  # [B, W]
-    start: jax.Array,  # [B] block-aligned absolute start of each suffix
+    start: jax.Array,  # [B] absolute start of each suffix (any offset)
     cfg: ArchConfig,
     *,
     sites: Union[ComputeConfig, SiteBinding] = EXACT,
@@ -401,15 +405,17 @@ def attn_prefill_paged(
     """Suffix prefill with past: global causal attention over the packed
     suffixes against prefix KV already resident in the pool.
 
-    The serve engine's prefix-cache path: matched prompt blocks are reused
-    verbatim, only the unmatched suffix runs here.  ``start`` must be
-    block-aligned (the radix tree matches whole blocks).  ``ctx_blocks``
-    (static) bounds the gathered context view; it must cover the longest
-    ``start + S_suf`` in the batch.  Padded rows write garbage into the
-    writer's own future blocks or scratch — never into readable positions.
+    The serve engine's prefix-cache *and* chunked-prefill path: resident
+    positions ``< start[b]`` are reused verbatim (matched prefix blocks,
+    or this request's own earlier chunks), only the packed suffix runs
+    here.  ``start`` may point anywhere inside a block — prefix matches
+    are block-aligned, but a scheduler chunk resumes wherever the last
+    chunk stopped.  ``ctx_blocks`` (static) bounds the gathered context
+    view; it must cover the longest ``start + S_suf`` in the batch.
+    Padded rows write garbage into the writer's own future positions or
+    scratch — never into readable positions.
     """
     b, s, _ = x.shape
-    bs = cache.k.shape[2]
     sites = as_binding(sites)
     positions = start[:, None] + jnp.arange(s)[None, :]  # [B, S]
     q = _split_heads(dense(p["wq"], x, sites("q_proj")), cfg.n_heads, cfg.head_dim)
@@ -418,14 +424,9 @@ def attn_prefill_paged(
     q = shard_act(q, ("batch", "heads", None, None))
     q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
-    pad = (-s) % bs
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    start_blk = start // bs
     cache = PagedKVCache(
-        _paged_write_blocks(cache.k, table, start_blk, k),
-        _paged_write_blocks(cache.v, table, start_blk, v),
+        _paged_write_span(cache.k, table, start, k),
+        _paged_write_span(cache.v, table, start, v),
     )
     ctx_tbl = jax.lax.slice(table, (0, 0), (b, ctx_blocks))
     k_log, v_log = _paged_view(cache, ctx_tbl)

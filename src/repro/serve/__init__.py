@@ -16,15 +16,25 @@ Public surface:
   :class:`~repro.serve.prefix_tree.RadixPrefixTree` — the paged-KV block
   allocator and the radix-tree prefix cache behind
   ``ServeConfig(kv_block_size=...)`` (docs/SERVING.md).
+* :class:`~repro.serve.scheduler.TokenBudgetScheduler` — the chunked-
+  prefill policy behind ``ServeConfig(prefill_chunk_tokens=...)``
+  (docs/SERVING.md §Scheduling): FCFS admission, decode priority, one
+  bounded prefill dispatch per round.
+* :class:`~repro.serve.accounting.RequestTiming` — measured queue/TTFT/
+  ITL latency carried on every :class:`RequestOutput`.
 """
+from repro.serve.accounting import RequestTiming
 from repro.serve.decode_loop import make_fused_decode, unfused_decode
 from repro.serve.engine import Request, RequestOutput, ServeConfig, ServeEngine
 from repro.serve.kv_pool import KVBlockPool
 from repro.serve.prefill import (
     full_seq_packable, pack_prompts, packed_prefill, prefill_paged_suffix,
+    prefill_window,
 )
 from repro.serve.prefix_tree import RadixPrefixTree
 from repro.serve.sampling import GREEDY, SamplerConfig
+from repro.serve.scheduler import SchedulerConfig, TokenBudgetScheduler
+from repro.serve.slots import SlotState
 
 __all__ = [
     "GREEDY",
@@ -32,13 +42,18 @@ __all__ = [
     "RadixPrefixTree",
     "Request",
     "RequestOutput",
+    "RequestTiming",
     "SamplerConfig",
+    "SchedulerConfig",
     "ServeConfig",
     "ServeEngine",
+    "SlotState",
+    "TokenBudgetScheduler",
     "full_seq_packable",
     "make_fused_decode",
     "pack_prompts",
     "packed_prefill",
     "prefill_paged_suffix",
+    "prefill_window",
     "unfused_decode",
 ]

@@ -10,12 +10,19 @@ Energy is also attributed per GEMM *site class* (the layer-stripped op id
 from the shared execution/simulator registry, e.g. ``attn.qk`` or
 ``rglru.in_proj``) so a serving run can report where the photonic energy
 goes under the active ExecutionPlan.
+
+Next to the modeled chip cost, each request carries *measured* serving
+latency (:class:`RequestTiming`): queue wait, time-to-first-token, and
+inter-token latency, all anchored at **submission** (``submit``), not
+admission — queue wait is part of the latency a caller observes, and the
+chunked-prefill scheduler (docs/SERVING.md §Scheduling) is judged on
+exactly these numbers.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.energy import AstraChipConfig
@@ -41,6 +48,54 @@ class RequestHardwareReport:
         d = dataclasses.asdict(self)
         d["energy_by_site"] = dict(self.energy_by_site)
         return d
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestTiming:
+    """Measured (wall-clock) serving latency of one request.
+
+    * ``queue_time_s`` — submission to admission into a slot;
+    * ``ttft_s``       — submission to the first generated token arriving
+      on the host (includes queue wait and every prefill chunk);
+    * ``wall_time_s``  — submission to completion, true end to end;
+    * ``mean_itl_s``   — (last token - first token) / (n_tokens - 1);
+    * ``max_itl_s``    — the worst gap between consecutive token-arrival
+      events.  A fused chunk delivers its tokens as one event, so this is
+      chunk-granular — exactly the quantity a blocking full-prompt
+      admission inflates for every other active slot.
+    """
+
+    queue_time_s: float
+    ttft_s: float
+    wall_time_s: float
+    mean_itl_s: float
+    max_itl_s: float
+    n_token_events: int = 0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def request_timing(t_submit: float, t_admit: float, t_first: float,
+                   token_events: Sequence[Tuple[float, int]],
+                   t_done: float) -> RequestTiming:
+    """Fold raw engine timestamps into a :class:`RequestTiming`.
+
+    ``token_events`` is ``[(host_time, n_tokens)]`` in arrival order; the
+    first event is the sampled first token (the TTFT token).  Requests
+    that never decode (``max_new_tokens == 0``) pass an empty list.
+    """
+    n_tokens = sum(n for _, n in token_events)
+    gaps = [b[0] - a[0] for a, b in zip(token_events, token_events[1:])]
+    span = token_events[-1][0] - token_events[0][0] if token_events else 0.0
+    return RequestTiming(
+        queue_time_s=max(t_admit - t_submit, 0.0),
+        ttft_s=max(t_first - t_submit, 0.0),
+        wall_time_s=max(t_done - t_submit, 0.0),
+        mean_itl_s=span / max(n_tokens - 1, 1),
+        max_itl_s=max(gaps, default=0.0),
+        n_token_events=len(token_events),
+    )
 
 
 @lru_cache(maxsize=4096)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.models.model import Model
 from repro.serve.sampling import SamplerConfig, sample_next_token
+from repro.serve.slots import select_states
 
 
 @functools.lru_cache(maxsize=64)
@@ -30,14 +31,24 @@ def make_fused_decode(model: Model):
     each distinct chunk length compiles once and is cached by jit.
     Memoized per (hashable, frozen) ``Model`` so every engine instance over
     the same model shares one jit cache — no recompiles across engines.
+
+    ``active`` (optional ``[B]`` bool) gates the per-slot state updates:
+    inactive slots keep their state exactly.  The chunked-prefill engine
+    passes it for dense layouts whenever a ``PREFILLING`` slot is present,
+    so ride-along decode cannot corrupt a half-prefilled slot's recurrent
+    state or KV.  (Paged layouts don't need it: a prefilling slot's block
+    table points at the scratch block until it starts decoding.)  With
+    ``active=None`` the program is unchanged from the maskless build.
     """
 
     def fused(params, tok, states, pos, key, steps: int, sampler: SamplerConfig,
-              tables=None):
+              tables=None, active=None):
         def step(carry, _):
             tok, states, pos, key = carry
-            logits, states = model.decode(params, tok, states, pos,
-                                          block_tables=tables)
+            logits, new_states = model.decode(params, tok, states, pos,
+                                              block_tables=tables)
+            states = (new_states if active is None
+                      else select_states(new_states, states, active))
             key, sub = jax.random.split(key)
             nxt = sample_next_token(logits, sampler, sub, model.cfg)
             return (nxt, states, pos + 1, key), nxt
@@ -58,17 +69,21 @@ def _jitted_decode(model: Model):
 
 
 def unfused_decode(model: Model, params, tok, states, pos, key, steps: int,
-                   sampler: SamplerConfig, tables=None) -> Tuple[jax.Array, tuple]:
+                   sampler: SamplerConfig, tables=None,
+                   active=None) -> Tuple[jax.Array, tuple]:
     """Seed-style reference loop: one ``jit(decode)`` dispatch per token.
 
     Kept as the parity oracle for the fused scan (and as the benchmark
-    baseline the fused loop is measured against).
+    baseline the fused loop is measured against).  ``active`` mirrors the
+    fused loop's optional per-slot state gate.
     """
     decode = _jitted_decode(model)
     out = []
     pos = jnp.asarray(pos, jnp.int32)
     for _ in range(steps):
-        logits, states = decode(params, tok, states, pos, tables)
+        logits, new_states = decode(params, tok, states, pos, tables)
+        states = (new_states if active is None
+                  else select_states(new_states, states, active))
         key, sub = jax.random.split(key)
         tok = sample_next_token(logits, sampler, sub, model.cfg)
         out.append(tok)

@@ -4,9 +4,10 @@ The engine owns a fixed grid of ``max_slots`` decode slots backed by one
 pre-allocated slotted state pytree (``Model.init_decode_state``).  Requests
 with different prompt lengths and generation budgets flow through it:
 
-  queue -> [admit: packed prefill -> scatter into free slots]
+  queue -> [admit: claim a free slot]
+        -> [prefill: full-prompt (blocking) or bounded chunks (scheduler)]
         -> [fused decode chunks: one XLA dispatch per chunk]
-        -> [retire finished slots -> per-request ASTRA accounting]
+        -> [retire finished slots -> per-request ASTRA accounting + timing]
 
 Admission and retirement happen between chunks; a chunk never runs past
 the earliest-finishing active slot (``steps = min(chunk_steps,
@@ -18,6 +19,22 @@ threaded down to the attention cache writes (``models.attention``).
 Inactive slots still ride through the batch (fixed shapes keep one
 compiled program); whatever they compute is discarded, and admission
 overwrites the slot's entire state before it is ever read.
+
+**Prefill scheduling** comes in two modes (docs/SERVING.md §Scheduling):
+
+* **blocking** (``prefill_chunk_tokens=0``) — admission runs the full
+  packed prompt prefill before the next decode chunk; one long prompt
+  stalls every active slot's token stream for the whole prefill.
+* **chunked** (``prefill_chunk_tokens>0``) — admitted requests hold their
+  slot in the ``PREFILLING`` state while their prompt is fed in bounded
+  chunks interleaved with decode chunks (``serve/scheduler.py``: FCFS,
+  decode priority, shared per-round token budget).  Dense layouts chunk
+  through the windowed masked scan (``prefill.prefill_window``); paged
+  pure-attention stacks chunk through ``prefill_paged_suffix`` — a
+  partially-prefilled request is just a request whose resident prefix is
+  its own earlier chunks.  Paged *stateful* stacks (recurrent/windowed)
+  fall back to blocking admission: their decode state cannot be resumed
+  from pooled blocks (same constraint as the prefix cache).
 
 KV memory comes in two layouts (docs/SERVING.md):
 
@@ -38,7 +55,7 @@ import dataclasses
 import time
 from collections import deque
 from functools import lru_cache
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,13 +65,18 @@ from repro.core.energy import AstraChipConfig
 from repro.core.plan import validate_site_registry
 from repro.models.attention import BlockTables
 from repro.models.model import Model
-from repro.serve.accounting import RequestHardwareReport, request_hardware_report
+from repro.serve.accounting import (
+    RequestHardwareReport, RequestTiming, request_hardware_report, request_timing,
+)
 from repro.serve.decode_loop import make_fused_decode
 from repro.serve.kv_pool import KVBlockPool
-from repro.serve.prefill import pack_prompts, packed_prefill, prefill_paged_suffix
+from repro.serve.prefill import (
+    pack_prompts, packed_prefill, prefill_paged_suffix, prefill_window,
+)
 from repro.serve.prefix_tree import RadixPrefixTree
 from repro.serve.sampling import GREEDY, SamplerConfig, sample_next_token
-from repro.serve.slots import paged_scatter_states, scatter_states
+from repro.serve.scheduler import SchedulerConfig, TokenBudgetScheduler, pow2_bucket
+from repro.serve.slots import SlotState, paged_scatter_states, scatter_states
 
 _paged_scatter = jax.jit(paged_scatter_states)
 
@@ -75,6 +97,10 @@ class ServeConfig:
     kv_pool_blocks: int = 0
     # radix-tree prefix reuse (paged + pure global-attention stacks only)
     prefix_cache: bool = True
+    # chunked-prefill scheduler (docs/SERVING.md §Scheduling): per-round
+    # token budget shared between decode (priority) and prefill; 0 keeps
+    # the blocking full-prompt admission
+    prefill_chunk_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -83,6 +109,8 @@ class Request:
     prompt: np.ndarray  # [S] or [C, S] multi-codebook, int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    t_submit: float = 0.0  # stamped by ServeEngine.submit — queue wait and
+    # wall time are measured from here, not from admission
 
     @property
     def prompt_len(self) -> int:
@@ -94,8 +122,9 @@ class RequestOutput:
     request_id: int
     prompt: np.ndarray
     tokens: np.ndarray  # generated tokens [G] (or [C, G])
-    wall_time_s: float
+    wall_time_s: float  # submit -> completion, true end to end
     hardware: Optional[RequestHardwareReport] = None
+    timing: Optional[RequestTiming] = None  # queue/TTFT/ITL breakdown
 
     @property
     def gen_len(self) -> int:
@@ -109,11 +138,16 @@ class RequestOutput:
 @dataclasses.dataclass
 class _Slot:
     req: Request
-    pos: int  # absolute position of the next decode write
-    remaining: int  # tokens still to generate
-    generated: List[np.ndarray]
-    t_start: float
+    state: SlotState
+    pos: int = 0  # absolute position of the next decode write
+    remaining: int = 0  # tokens still to generate
+    filled: int = 0  # prompt tokens resident (prefix-cached or prefilled)
+    generated: List[np.ndarray] = dataclasses.field(default_factory=list)
     cached: int = 0  # prompt tokens served from the prefix cache
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    # token-arrival events [(host_time, n_tokens)] — one per fused chunk
+    events: List[Tuple[float, int]] = dataclasses.field(default_factory=list)
 
 
 @lru_cache(maxsize=256)
@@ -158,10 +192,12 @@ class ServeEngine:
         self._fused = make_fused_decode(model)
         self._queue: deque[Request] = deque()
         self._slots: List[Optional[_Slot]] = [None] * config.max_slots
-        self._finished: Dict[int, RequestOutput] = {}
-        self._order: List[int] = []
+        self._outbox: List[RequestOutput] = []  # finished, not yet collected
         self._next_id = 0
         self._key = jax.random.PRNGKey(config.seed)
+        # prefix reuse / chunked paged prefill need every stateful layer's
+        # state to be reconstructible from pooled blocks -> pure global attn
+        self._suffix_path = all(k == "attn" for k in cfg.layer_kinds)
         # ----------------------------------------------------- KV layout
         self._paged = (config.kv_block_size > 0
                        and any(k in ("attn", "local") for k in cfg.layer_kinds))
@@ -190,9 +226,6 @@ class ServeEngine:
             self._tables_dirty = False
             self._ring_len = (min(config.max_len, cfg.window)
                               if any(k == "local" for k in cfg.layer_kinds) else 0)
-            # prefix reuse needs every stateful layer's state to be
-            # reconstructible from pooled blocks -> pure global attention
-            self._suffix_path = all(k == "attn" for k in cfg.layer_kinds)
             if config.prefix_cache and self._suffix_path and _kv_deterministic(model):
                 self._prefix = RadixPrefixTree(bs)
             self._states = model.init_decode_state(
@@ -200,6 +233,25 @@ class ServeEngine:
             )
         else:
             self._states = model.init_decode_state(config.max_slots, config.max_len)
+        # --------------------------------------------- prefill scheduling
+        self._sched: Optional[TokenBudgetScheduler] = None
+        self._prefilling: List[int] = []  # PREFILLING slot ids, admission order
+        self._admit_stalled = False  # paged admission rolled back this round
+        if config.prefill_chunk_tokens < 0:
+            raise ValueError(
+                f"prefill_chunk_tokens={config.prefill_chunk_tokens} is "
+                "negative; pass a per-round token budget or 0 for blocking "
+                "admission"
+            )
+        if config.prefill_chunk_tokens > 0:
+            if self._paged and not self._suffix_path:
+                # stateful stacks cannot resume recurrent/ring state from
+                # pooled blocks mid-prompt; their paged mode admits one-shot
+                # (the dense layout of the same arch chunks fine)
+                self._sched = None
+            else:
+                self._sched = TokenBudgetScheduler(
+                    SchedulerConfig(config.prefill_chunk_tokens))
         tok_shape = ((config.max_slots, cfg.n_codebooks, 1) if cfg.n_codebooks
                      else (config.max_slots, 1))
         self._cur_tok = jnp.zeros(tok_shape, jnp.int32)
@@ -213,6 +265,9 @@ class ServeEngine:
     # ------------------------------------------------------------- intake
     def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
+        if prompt.shape[-1] == 0:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "prompt token (its logits seed sampling)")
         if prompt.shape[-1] + max_new_tokens > self.config.max_len:
             raise ValueError(
                 f"prompt_len {prompt.shape[-1]} + max_new {max_new_tokens} "
@@ -220,11 +275,11 @@ class ServeEngine:
             )
         rid = self._next_id
         self._next_id += 1
-        req = Request(rid, prompt, max_new_tokens, eos_id)
-        self._order.append(rid)
+        req = Request(rid, prompt, max_new_tokens, eos_id, t_submit=time.time())
         if max_new_tokens == 0:
             # nothing to decode: complete without ever taking a slot
-            self._complete(req, [], time.time())
+            self._complete(req, [], t_admit=req.t_submit, t_first=req.t_submit,
+                           events=[])
         else:
             self._queue.append(req)
         return rid
@@ -234,18 +289,45 @@ class ServeEngine:
         return bool(self._queue) or any(s is not None for s in self._slots)
 
     def run(self) -> List[RequestOutput]:
-        """Drain queue and slots; outputs in submission order."""
+        """Drain queue and slots; returns every output completed since the
+        last collection (``run``/``step``), in submission order.
+
+        Outputs are handed over exactly once — a long-lived engine does
+        not accumulate history, and interleaved callers each see only the
+        work finished since they last collected.
+        """
+        outs = self._drain()
         while self.has_work():
-            self.step()
-        return [self._finished[rid] for rid in self._order]
+            outs.extend(self.step())
+        return sorted(outs, key=lambda o: o.request_id)
 
     def step(self) -> List[RequestOutput]:
-        """Admit + one fused chunk.  Returns requests finished this step."""
-        before = set(self._finished)
+        """Admit + prefill work + one fused chunk.  Drains and returns the
+        requests that finished since the last collection."""
         self._admit()
+        if self._sched is not None:
+            self._prefill_chunk()
         self._decode_chunk()
-        return [self._finished[rid] for rid in self._order
-                if rid in self._finished and rid not in before]
+        self._check_progress()
+        return self._drain()
+
+    def _drain(self) -> List[RequestOutput]:
+        outs, self._outbox = self._outbox, []
+        return outs
+
+    def _check_progress(self):
+        """Fail loudly instead of spinning when paged admission can never
+        succeed (possible only when pool invariants were broken externally
+        — the construction-time floor makes organic admission infallible)."""
+        if (self._admit_stalled and self._queue
+                and not any(s is not None for s in self._slots)):
+            raise RuntimeError(
+                "serve engine wedged: paged admission failed with every slot "
+                "free, so no retirement can ever release blocks "
+                f"({len(self._queue)} request(s) queued, "
+                f"{self._pool.n_free} pool blocks free)"
+            )
+        self._admit_stalled = False
 
     # ------------------------------------------------------------- admit
     def _admit(self):
@@ -253,23 +335,77 @@ class ServeEngine:
         n = min(len(free), len(self._queue))
         if n == 0:
             return
-        slots_ids = free[:n]
-        reqs = [self._queue.popleft() for _ in range(n)]
-        t_start = time.time()
-        if self._paged:
-            last_logits, cached = self._prefill_paged(slots_ids, reqs)
+        if self._sched is not None:
+            self._admit_chunked(free[:n])
         else:
-            last_logits = self._prefill_dense(slots_ids, reqs)
-            cached = [0] * n
+            self._admit_blocking(free[:n])
+
+    def _reserve_blocks(self, req: Request) -> Tuple[List[int], int]:
+        """Match + incref prefix blocks and allocate the rest for ``req``.
+
+        Returns (blocks, n_matched).  Atomic: if the pool cannot cover the
+        allocation (a forced evict shortfall — impossible under the
+        construction-time floor unless the pool was tampered with), every
+        incref taken here is rolled back before the ``RuntimeError``
+        propagates, so the caller can re-queue the request with no leaked
+        refcounts.
+        """
+        bs = self._block_size
+        total = -(-(req.prompt_len + req.max_new_tokens) // bs)
+        matched: List[int] = []
+        if self._prefix is not None:
+            # always leave >= 1 suffix token: the last prompt token's
+            # logits seed the first sampled token
+            matched = self._prefix.match(
+                req.prompt, max_blocks=min((req.prompt_len - 1) // bs, total)
+            )
+            for blk in matched:
+                self._pool.incref(blk)
+        need = total - len(matched)
+        try:
+            if need > self._pool.n_free and self._prefix is not None:
+                self._prefix.evict(need - self._pool.n_free, self._pool)
+            fresh = self._pool.alloc(need)
+        except RuntimeError:
+            for blk in matched:
+                self._pool.decref(blk)
+            raise
+        return matched + fresh, len(matched)
+
+    def _install_blocks(self, slot_i: int, blocks: List[int],
+                        into_table: bool) -> None:
+        """Record a slot's blocks; materialize its table row only when the
+        slot is (or is about to be) visible to decode — a PREFILLING slot's
+        row stays at scratch so ride-along decode writes land nowhere."""
+        self._slot_blocks[slot_i] = blocks
+        self._tables_np[slot_i] = 0
+        if into_table:
+            self._tables_np[slot_i, : len(blocks)] = blocks
+        self._tables_dirty = True
+
+    # ------------------------------------------------- blocking admission
+    def _admit_blocking(self, slot_ids: List[int]):
+        reqs = [self._queue.popleft() for _ in range(len(slot_ids))]
+        t_admit = time.time()
+        if self._paged:
+            slot_ids, reqs, last_logits, cached = self._prefill_paged(slot_ids, reqs)
+            if not reqs:
+                return
+        else:
+            last_logits = self._prefill_dense(slot_ids, reqs)
+            cached = [0] * len(reqs)
         self._key, sub = jax.random.split(self._key)
         first = sample_next_token(last_logits, self.config.sampler, sub, self.model.cfg)
-        ids = jnp.asarray(slots_ids, jnp.int32)
+        ids = jnp.asarray(slot_ids, jnp.int32)
         self._cur_tok = self._cur_tok.at[ids].set(first)
         first_np = np.asarray(first)  # [n, 1] or [n, C, 1]
-        for j, (i, req) in enumerate(zip(slots_ids, reqs)):
+        t_first = time.time()
+        for j, (i, req) in enumerate(zip(slot_ids, reqs)):
             tok0 = first_np[j]  # [1] or [C, 1]
-            slot = _Slot(req, pos=req.prompt_len, remaining=req.max_new_tokens - 1,
-                         generated=[tok0], t_start=t_start, cached=cached[j])
+            slot = _Slot(req, SlotState.DECODING, pos=req.prompt_len,
+                         remaining=req.max_new_tokens - 1, filled=req.prompt_len,
+                         generated=[tok0], cached=cached[j], t_admit=t_admit,
+                         t_first=t_first, events=[(t_first, 1)])
             if self._hit_eos(req, tok0) or slot.remaining == 0:
                 self._retire(slot)
                 self._release_blocks(i)
@@ -291,59 +427,222 @@ class ServeEngine:
         self._states = scatter_states(self._states, small_states, ids)
         return last_logits
 
-    def _prefill_paged(self, slots_ids: List[int], reqs: List[Request]):
+    def _prefill_paged(self, slot_ids: List[int], reqs: List[Request]):
         """Allocate block tables (reusing interned prefix blocks), prefill
-        the unmatched work, and intern the new prompt blocks."""
+        the unmatched work, and intern the new prompt blocks.
+
+        Exception-safe: if a request's blocks cannot be covered (forced
+        evict shortfall), its increfs are rolled back and it — plus every
+        later popped request, preserving FCFS order — is re-queued at the
+        front; the requests admitted before it proceed normally.
+        """
         bs, w = self._block_size, self._table_width
         starts: List[int] = []
-        for i, req in zip(slots_ids, reqs):
-            total = -(-(req.prompt_len + req.max_new_tokens) // bs)
-            matched: List[int] = []
-            if self._prefix is not None:
-                # always leave >= 1 suffix token: the last prompt token's
-                # logits seed the first sampled token
-                matched = self._prefix.match(
-                    req.prompt, max_blocks=min((req.prompt_len - 1) // bs, total)
-                )
-                for blk in matched:
-                    self._pool.incref(blk)
-            need = total - len(matched)
-            if need > self._pool.n_free and self._prefix is not None:
-                self._prefix.evict(need - self._pool.n_free, self._pool)
-            blocks = matched + self._pool.alloc(need)
-            self._slot_blocks[i] = blocks
-            self._tables_np[i] = 0
-            self._tables_np[i, : len(blocks)] = blocks
-            starts.append(len(matched) * bs)
-        self._tables_dirty = True
-        rows_dev = jnp.asarray(self._tables_np[slots_ids])
+        adm_slots: List[int] = []
+        adm_reqs: List[Request] = []
+        for k, (i, req) in enumerate(zip(slot_ids, reqs)):
+            try:
+                blocks, n_matched = self._reserve_blocks(req)
+            except RuntimeError:
+                for r in reversed(reqs[k:]):
+                    self._queue.appendleft(r)
+                self._admit_stalled = True
+                break
+            self._install_blocks(i, blocks, into_table=True)
+            starts.append(n_matched * bs)
+            adm_slots.append(i)
+            adm_reqs.append(req)
+        if not adm_reqs:
+            return [], [], None, []
+        rows_dev = jnp.asarray(self._tables_np[adm_slots])
         if self._suffix_path:
-            suffixes = [r.prompt[..., s:] for r, s in zip(reqs, starts)]
+            suffixes = [r.prompt[..., s:] for r, s in zip(adm_reqs, starts)]
             tokens, lengths = pack_prompts(suffixes, self.model.cfg)
-            need_blocks = max(
-                -(-(s + int(tokens.shape[-1])) // bs) for s in starts
-            )
-            ctx = 1
-            while ctx < need_blocks:
-                ctx *= 2  # pow2 buckets bound the jit-compile count
-            ctx = min(ctx, w)
+            ctx = self._ctx_bucket(max(
+                s + int(tokens.shape[-1]) for s in starts
+            ))
             last_logits, self._states = prefill_paged_suffix(
                 self.model, self.params, tokens, lengths, self._states,
                 rows_dev, jnp.asarray(starts, jnp.int32), ctx,
             )
         else:
-            last_logits, small_states = self._packed_prefill_small(reqs)
+            last_logits, small_states = self._packed_prefill_small(adm_reqs)
             self._states = _paged_scatter(
-                self._states, small_states, jnp.asarray(slots_ids, jnp.int32), rows_dev
+                self._states, small_states, jnp.asarray(adm_slots, jnp.int32),
+                rows_dev
             )
         if self._prefix is not None:
-            for i, req, start in zip(slots_ids, reqs, starts):
-                nb_full = req.prompt_len // bs
-                if nb_full > start // bs:
-                    self._prefix.insert(req.prompt[..., : nb_full * bs],
-                                        self._slot_blocks[i][:nb_full], self._pool)
-        return last_logits, starts
+            for i, req, start in zip(adm_slots, adm_reqs, starts):
+                self._intern_prompt(i, req, start)
+        return adm_slots, adm_reqs, last_logits, starts
 
+    def _intern_prompt(self, slot_i: int, req: Request, start: int):
+        bs = self._block_size
+        nb_full = req.prompt_len // bs
+        if nb_full > start // bs:
+            self._prefix.insert(req.prompt[..., : nb_full * bs],
+                                self._slot_blocks[slot_i][:nb_full], self._pool)
+
+    def _ctx_bucket(self, max_pos: int) -> int:
+        """Pow2 context-view width (blocks) covering ``max_pos`` positions —
+        bounds the jit-compile count of the suffix prefill."""
+        need = -(-max_pos // self._block_size)
+        return max(pow2_bucket(need, self._table_width), 1)
+
+    # -------------------------------------------------- chunked admission
+    def _admit_chunked(self, slot_ids: List[int]):
+        """Claim free slots for waiting requests as PREFILLING — no prefill
+        work here; the scheduler feeds their prompts in bounded chunks."""
+        t_admit = time.time()
+        new_dense: List[int] = []
+        for i in slot_ids:
+            if not self._queue:
+                break
+            req = self._queue[0]
+            filled = 0
+            if self._paged:
+                try:
+                    blocks, n_matched = self._reserve_blocks(req)
+                except RuntimeError:
+                    # FCFS: the head can't fit — don't admit later requests
+                    # over it; retry once retirements free blocks
+                    self._admit_stalled = True
+                    break
+                # table row stays at scratch until the slot starts DECODING:
+                # ride-along decode writes must not touch its real blocks
+                self._install_blocks(i, blocks, into_table=False)
+                filled = n_matched * self._block_size
+            self._queue.popleft()
+            self._slots[i] = _Slot(req, SlotState.PREFILLING, filled=filled,
+                                   cached=filled, t_admit=t_admit)
+            self._prefilling.append(i)
+            if not self._paged:
+                new_dense.append(i)
+        if new_dense:
+            # dense chunked prefill builds the slot state *in place*, so the
+            # previous occupant's state must be zeroed (recurrent leaves
+            # especially; KV positions are rewritten in prompt order anyway)
+            zeros = self.model.init_decode_state(len(new_dense), self.config.max_len)
+            self._states = scatter_states(self._states, zeros,
+                                          jnp.asarray(new_dense, jnp.int32))
+
+    def _prefill_chunk(self):
+        """One bounded prefill dispatch: the scheduler's FCFS chunk plan
+        for this round, then DECODING transitions for completed prompts."""
+        if not self._prefilling:
+            return
+        n_active = sum(1 for s in self._slots
+                       if s is not None and s.state is SlotState.DECODING)
+        needs = [(i, self._slots[i].req.prompt_len - self._slots[i].filled)
+                 for i in self._prefilling]
+        plan = self._sched.plan_chunks(needs, n_active)
+        if not plan:
+            return
+        if self._paged:
+            last_logits = self._prefill_chunk_paged(plan)  # [n_sel, 1, ...]
+            row_of = {i: j for j, (i, _) in enumerate(plan)}
+        else:
+            last_logits = self._prefill_chunk_dense(plan)  # [B, 1, ...]
+            row_of = {i: i for i, _ in plan}
+        done: List[int] = []
+        for i, take in plan:
+            slot = self._slots[i]
+            slot.filled += take
+            if slot.filled == slot.req.prompt_len:
+                done.append(i)
+        if done:
+            self._start_decoding(done, last_logits, [row_of[i] for i in done])
+
+    def _chunk_tokens(self, plan: List[Tuple[int, int]], width: int,
+                      rows: Optional[List[int]] = None) -> np.ndarray:
+        """Pack each planned slot's next prompt slice into a ``[n, width]``
+        (or ``[n, C, width]``) grid.  ``rows`` maps plan entries to grid
+        rows (defaults to 0..n-1)."""
+        cfg = self.model.cfg
+        n = len(plan) if rows is None else self.config.max_slots
+        shape = (n, cfg.n_codebooks, width) if cfg.n_codebooks else (n, width)
+        toks = np.zeros(shape, np.int32)
+        for j, (i, take) in enumerate(plan):
+            slot = self._slots[i]
+            r = j if rows is None else rows[j]
+            toks[r, ..., :take] = slot.req.prompt[..., slot.filled:slot.filled + take]
+        return toks
+
+    def _prefill_chunk_paged(self, plan: List[Tuple[int, int]]):
+        """Chunked suffix prefill against the paged pool: each selected
+        slot's resident prefix is its prefix-cache hit plus its own earlier
+        chunks (``starts`` need not be block-aligned)."""
+        width = pow2_bucket(max(t for _, t in plan),
+                            self.config.prefill_chunk_tokens)
+        tokens = jnp.asarray(self._chunk_tokens(plan, width))
+        starts = [self._slots[i].filled for i, _ in plan]
+        lengths = jnp.asarray([t for _, t in plan], jnp.int32)
+        rows_dev = jnp.asarray(np.stack([
+            self._real_row(i) for i, _ in plan
+        ]))
+        ctx = self._ctx_bucket(max(s + width for s in starts))
+        last_logits, self._states = prefill_paged_suffix(
+            self.model, self.params, tokens, lengths, self._states,
+            rows_dev, jnp.asarray(starts, jnp.int32), ctx,
+        )
+        return last_logits
+
+    def _real_row(self, slot_i: int) -> np.ndarray:
+        row = np.zeros(self._table_width, np.int32)
+        blocks = self._slot_blocks[slot_i]
+        row[: len(blocks)] = blocks
+        return row
+
+    def _prefill_chunk_dense(self, plan: List[Tuple[int, int]]):
+        """Chunked dense prefill: one windowed masked scan over the full
+        engine state — selected slots advance, everything else is gated."""
+        width = pow2_bucket(max(t for _, t in plan),
+                            self.config.prefill_chunk_tokens)
+        b = self.config.max_slots
+        tokens = jnp.asarray(
+            self._chunk_tokens(plan, width, rows=[i for i, _ in plan]))
+        starts = np.zeros(b, np.int32)
+        lengths = np.zeros(b, np.int32)
+        for i, take in plan:
+            starts[i] = self._slots[i].filled
+            lengths[i] = take
+        last_logits, self._states = prefill_window(
+            self.model, self.params, tokens, jnp.asarray(starts),
+            jnp.asarray(lengths), self._states,
+        )
+        return last_logits
+
+    def _start_decoding(self, slot_ids: List[int], last_logits, rows: List[int]):
+        """PREFILLING -> DECODING: sample each completed prompt's first
+        token, expose paged table rows, intern prefix blocks."""
+        self._key, sub = jax.random.split(self._key)
+        logits = last_logits[jnp.asarray(rows, jnp.int32)]
+        first = sample_next_token(logits, self.config.sampler, sub, self.model.cfg)
+        ids = jnp.asarray(slot_ids, jnp.int32)
+        self._cur_tok = self._cur_tok.at[ids].set(first)
+        first_np = np.asarray(first)
+        t_first = time.time()
+        for j, i in enumerate(slot_ids):
+            slot = self._slots[i]
+            req = slot.req
+            tok0 = first_np[j]
+            slot.state = SlotState.DECODING
+            slot.pos = req.prompt_len
+            slot.remaining = req.max_new_tokens - 1
+            slot.generated = [tok0]
+            slot.t_first = t_first
+            slot.events = [(t_first, 1)]
+            self._prefilling.remove(i)
+            if self._paged:
+                self._install_blocks(i, self._slot_blocks[i], into_table=True)
+                if self._prefix is not None:
+                    self._intern_prompt(i, req, slot.cached)
+            if self._hit_eos(req, tok0) or slot.remaining == 0:
+                self._retire(slot)
+                self._release_blocks(i)
+                self._slots[i] = None
+
+    # ------------------------------------------------------ paged helpers
     def _release_blocks(self, slot_i: int):
         if not self._paged or not self._slot_blocks[slot_i]:
             return
@@ -363,7 +662,8 @@ class ServeEngine:
 
     # ------------------------------------------------------------- chunk
     def _decode_chunk(self):
-        active = [i for i, s in enumerate(self._slots) if s is not None]
+        active = [i for i, s in enumerate(self._slots)
+                  if s is not None and s.state is SlotState.DECODING]
         if not active:
             return
         steps = min(self.config.chunk_steps,
@@ -371,18 +671,29 @@ class ServeEngine:
         pos = np.zeros(self.config.max_slots, np.int32)
         for i in active:
             pos[i] = self._slots[i].pos
+        mask = None
+        if (self._sched is not None and not self._paged
+                and len(active) < sum(s is not None for s in self._slots)):
+            # dense + PREFILLING slots present: gate ride-along state
+            # updates so half-prefilled recurrent/KV state stays intact
+            m = np.zeros(self.config.max_slots, bool)
+            m[active] = True
+            mask = jnp.asarray(m)
         self._key, sub = jax.random.split(self._key)
         toks, (next_tok, states, _, _) = self._fused(
             self.params, self._cur_tok, self._states, jnp.asarray(pos), sub,
             steps=steps, sampler=self.config.sampler,
             tables=self._block_tables() if self._paged else None,
+            active=mask,
         )
         self._states = states
         self._cur_tok = next_tok
         toks_np = np.asarray(toks)  # [B, steps] or [B, C, steps]
+        t_now = time.time()
         for i in active:
             slot = self._slots[i]
             slot.generated.append(toks_np[i])
+            slot.events.append((t_now, steps))
             slot.pos += steps
             slot.remaining -= steps
             if slot.remaining == 0 or self._hit_eos(slot.req, toks_np[i]):
@@ -402,9 +713,17 @@ class ServeEngine:
             hits = np.nonzero(gen == slot.req.eos_id)[0]
             if hits.size:
                 gen = gen[: hits[0] + 1]  # keep the EOS, drop overshoot
-        self._complete(slot.req, gen, slot.t_start, cached=slot.cached)
+        # EOS can truncate mid-chunk: reconcile the final arrival event so
+        # the timing token count matches the tokens actually delivered
+        overshoot = sum(n for _, n in slot.events) - int(gen.shape[-1])
+        if overshoot > 0 and slot.events:
+            t_last, n_last = slot.events[-1]
+            slot.events[-1] = (t_last, n_last - overshoot)
+        self._complete(slot.req, gen, slot.t_admit, slot.t_first, slot.events,
+                       cached=slot.cached)
 
-    def _complete(self, req: Request, gen, t_start: float, cached: int = 0):
+    def _complete(self, req: Request, gen, t_admit: float, t_first: float,
+                  events: List[Tuple[float, int]], cached: int = 0):
         gen = np.asarray(gen, np.int32)
         if gen.size == 0:
             shape = (req.prompt.shape[0], 0) if req.prompt.ndim == 2 else (0,)
@@ -415,11 +734,12 @@ class ServeEngine:
                 self.model.cfg, self.chip, req.prompt_len, int(gen.shape[-1]),
                 cached_prompt_len=cached,
             )
-        self._finished[req.id] = RequestOutput(
-            req.id, req.prompt, gen, time.time() - t_start, hw
-        )
+        timing = request_timing(req.t_submit, t_admit, t_first, events, time.time())
+        self._outbox.append(RequestOutput(
+            req.id, req.prompt, gen, timing.wall_time_s, hw, timing
+        ))
 
-    # ---------------------------------------------------------- prefix stats
+    # ------------------------------------------------------------- stats
     @property
     def prefix_stats(self) -> Dict[str, int]:
         """Radix-tree/pool counters (empty when the prefix cache is off)."""
@@ -432,10 +752,23 @@ class ServeEngine:
             "free_blocks": self._pool.n_free,
         }
 
+    @property
+    def scheduler_stats(self) -> Dict[str, int]:
+        """Chunked-prefill counters; ``{"active": False}`` under blocking
+        admission (including the paged-stateful fallback)."""
+        if self._sched is None:
+            return {"active": False}
+        return {"active": True, **self._sched.stats}
+
     # -------------------------------------------------------- convenience
     def generate_batch(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
                        eos_id: Optional[int] = None) -> List[RequestOutput]:
-        """Submit a batch and drain — outputs in prompt order."""
+        """Submit a batch and drain — outputs in prompt order.
+
+        Collects (and discards) any outputs still pending from earlier
+        interleaved submissions; callers mixing APIs should use
+        ``submit`` + ``run``/``step`` directly.
+        """
         ids = [self.submit(p, max_new_tokens, eos_id) for p in prompts]
-        self.run()
-        return [self._finished[rid] for rid in ids]
+        by_id = {o.request_id: o for o in self.run()}
+        return [by_id[rid] for rid in ids]

@@ -16,6 +16,14 @@ the padding could corrupt.  Two strategies, chosen per architecture:
   recurrent blocks (RG-LRU, xLSTM) and sliding-window rings, whose states
   would absorb padding garbage under a padded full-sequence pass.
 
+The chunked-prefill scheduler (``serve/scheduler.py``) adds a windowed
+variant of the masked scan (``prefill_window``): one bounded chunk of
+each slot's prompt, run *in place* over the engine's slotted state with
+per-slot start offsets — admission never blocks decode for more than one
+such bounded dispatch.  (The paged pure-attention path chunks through
+``prefill_paged_suffix`` instead, which accepts arbitrary in-block start
+offsets.)
+
 Why sliding-window ("local") blocks are excluded from full-seq packing:
 ``_make_cache`` keeps only the last ``window`` positions of the *padded*
 sequence, so a short request's real KV can be rolled out of the ring by
@@ -49,8 +57,15 @@ def pack_prompts(prompts: Sequence[np.ndarray], cfg: ArchConfig,
     Each prompt is ``[S_i]`` (or ``[C, S_i]`` multi-codebook).  Returns
     (tokens ``[B, S_max]`` / ``[B, C, S_max]``, lengths ``[B]`` int32).
     """
+    if not prompts:
+        raise ValueError("pack_prompts needs at least one prompt")
     lens = [int(np.asarray(p).shape[-1]) for p in prompts]
-    assert all(l > 0 for l in lens), "empty prompt"
+    if any(l == 0 for l in lens):
+        # a real error, not an assert: it must survive `python -O`, and
+        # ServeEngine.submit re-checks so the engine rejects before a slot
+        # is ever claimed
+        raise ValueError(f"empty prompt at index {lens.index(0)}: prompts "
+                         "must contain at least one token")
     s_max = max(lens)
     rows = []
     for p in prompts:
@@ -117,6 +132,55 @@ def prefill_scan(model: Model, params, tokens: jax.Array, lengths: jax.Array,
     return last, states
 
 
+def prefill_window(model: Model, params, tokens: jax.Array, starts: jax.Array,
+                   lengths: jax.Array, states):
+    """One chunked-prefill window over the ENGINE state (dense layouts).
+
+    The masked-scan prefill, windowed: feed slot ``b`` its next
+    ``lengths[b]`` prompt tokens starting at absolute position
+    ``starts[b]``, updating the full slotted state pytree in place with
+    per-slot gating (``t >= lengths[b]`` leaves slot ``b`` untouched —
+    rows with ``lengths[b] == 0``, i.e. slots that are decoding or free
+    this round, ride along unchanged).  ``tokens`` is ``[B, L]`` (or
+    ``[B, C, L]``), right-padded per slot.  Returns
+    (last-position logits ``[B, 1, ...]``, updated states); the logits
+    row is meaningful only for slots whose chunk ends at ``lengths[b]-1``
+    — the engine reads it when that chunk completes the prompt.
+    """
+    model = _drop_free(model)
+    return _window_jit(model)(params, tokens, starts, lengths, states)
+
+
+@functools.lru_cache(maxsize=64)
+def _window_jit(model: Model):
+    cfg = model.cfg
+
+    def f(params, tokens, starts, lengths, states):
+        b = tokens.shape[0]
+        s = tokens.shape[-1]
+        toks_t = jnp.moveaxis(tokens, -1, 0)[..., None]  # [L, B, 1] | [L, B, C, 1]
+        v = cfg.vocab
+        last0 = jnp.zeros((b, 1, cfg.n_codebooks, v) if cfg.n_codebooks
+                          else (b, 1, v), jnp.float32)
+
+        def step(carry, xs):
+            states, last = carry
+            t, tok = xs
+            logits, new_states = model.decode(params, tok, states, starts + t)
+            active = t < lengths
+            states = select_states(new_states, states, active)
+            is_last = (t == lengths - 1).reshape((b,) + (1,) * (logits.ndim - 1))
+            last = jnp.where(is_last, logits, last)
+            return (states, last), None
+
+        (states, last), _ = jax.lax.scan(
+            step, (states, last0), (jnp.arange(s, dtype=jnp.int32), toks_t)
+        )
+        return last, states
+
+    return jax.jit(f)
+
+
 def _last_logits(logits: jax.Array, lengths: jax.Array) -> jax.Array:
     b = logits.shape[0]
     idx = (lengths - 1).reshape((b,) + (1,) * (logits.ndim - 1)).astype(jnp.int32)
@@ -127,11 +191,13 @@ def prefill_paged_suffix(model: Model, params, tokens: jax.Array, lengths: jax.A
                          states, rows: jax.Array, starts: jax.Array, ctx_blocks: int):
     """Prefix-aware admission prefill against the paged KV pool.
 
-    ``tokens [n, S_suf]`` are the admitted requests' *unmatched suffixes*
-    (right-padded), ``rows [n, W]`` their block-table rows, ``starts [n]``
-    the block-aligned prefix lengths already resident in the pool (0 for a
-    cold request — this is also the cold path for pure-attention stacks
-    under paging).  Returns (last_logits, updated pooled states).
+    ``tokens [n, S_suf]`` are the admitted requests' *unprefilled
+    suffixes* (right-padded), ``rows [n, W]`` their block-table rows,
+    ``starts [n]`` the prefix lengths already resident in the pool — a
+    block-aligned prefix-cache match, a chunked-prefill resume point at
+    any in-block offset, or 0 for a cold request (also the cold path for
+    pure-attention stacks under paging).  Returns (last_logits, updated
+    pooled states).
     """
     model = _drop_free(model)
     return _suffix_jit(model)(params, tokens, lengths, states, rows, starts,

@@ -1,0 +1,139 @@
+"""Token-budget scheduler: chunked prefill with decode priority.
+
+The blocking admission path runs a *full-prompt* prefill before any
+decode chunk can dispatch, so one long prompt stalls every active slot's
+token stream (head-of-line blocking).  This module is the policy side of
+the fix (Sarathi/vLLM-style chunked prefill): prompt prefill is split
+into bounded chunks interleaved with decode chunks, so in-flight decode
+is never stalled for more than one bounded dispatch.
+
+Each engine *round* is one ``ServeEngine.step()``:
+
+  admit  -> waiting requests claim free slots in FCFS order and enter the
+            ``PREFILLING`` state (no prefill work yet);
+  prefill-> at most one bounded dispatch covering this round's prefill
+            chunk assignments (this module decides them);
+  decode -> one fused chunk over the ``DECODING`` slots (always runs —
+            decode has structural priority, prefill can never displace it).
+
+The per-round *token budget* is shared between the two phases: decode
+claims one token per active slot (each fused step advances every active
+slot by one position), and prefill gets the remainder,
+
+    prefill_budget = max(token_budget - n_active_decode, 0)
+
+split across the PREFILLING slots oldest-first (FCFS — a later prompt
+only gets budget once every earlier prompt's remaining need is covered
+this round).  When decode occupies the whole budget, prefill waits;
+slots retiring frees budget, so admission is delayed, never deadlocked.
+Chunk widths are bucketed to powers of two so the number of distinct
+compiled prefill programs stays logarithmic in the budget.
+
+Metric definitions used by the engine/benchmarks (docs/SERVING.md):
+
+* ``queue_time_s`` — submit -> admission into a slot;
+* ``TTFT`` — submit -> first generated token on the host;
+* ``ITL`` — gap between consecutive token-arrival events of one request
+  (a fused chunk delivers its tokens as one event; ``max_itl_s`` is the
+  worst such gap, the quantity head-of-line blocking inflates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+
+def pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= ``n``, clamped to ``cap``.
+
+    Bounds the set of compiled chunk widths: every dispatch is padded to
+    a bucket, so at most ``log2(cap)`` distinct programs exist per model.
+    """
+    if n <= 0:
+        return 0
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Policy knobs for :class:`TokenBudgetScheduler`.
+
+    ``token_budget`` is the per-round cap shared by decode (priority) and
+    prefill — the CLI exposes it as ``--prefill-chunk-tokens``.  A budget
+    at or below the live decode count starves prefill until slots retire;
+    that is a throughput/latency trade the operator opted into, not an
+    error, but budgets comfortably above ``max_slots`` are the useful
+    regime.
+    """
+
+    token_budget: int
+
+    def __post_init__(self):
+        if self.token_budget < 1:
+            raise ValueError(
+                f"token_budget must be >= 1, got {self.token_budget} "
+                "(0 selects the blocking admission path at the engine level)"
+            )
+
+
+class TokenBudgetScheduler:
+    """FCFS chunked-prefill planner with decode priority.
+
+    Pure host-side policy: the engine owns the queue and the slots; this
+    object decides how many prompt tokens each PREFILLING slot may run
+    this round, and keeps the counters surfaced as
+    ``ServeEngine.scheduler_stats``.
+    """
+
+    def __init__(self, config: SchedulerConfig):
+        self.config = config
+        # counters surfaced by the engine / benchmarks
+        self.rounds = 0
+        self.chunks = 0
+        self.prefill_tokens = 0
+        self.starved_rounds = 0  # rounds where decode consumed the budget
+
+    def prefill_budget(self, n_active_decode: int) -> int:
+        """Tokens left for prefill after decode's per-round claim."""
+        return max(self.config.token_budget - n_active_decode, 0)
+
+    def plan_chunks(self, needs: Sequence[Tuple[int, int]],
+                    n_active_decode: int) -> List[Tuple[int, int]]:
+        """Assign this round's prefill budget FCFS.
+
+        ``needs`` is ``[(slot_id, remaining_prompt_tokens)]`` in admission
+        order; returns ``[(slot_id, chunk_len)]`` for the slots that get
+        work this round (possibly empty).  The head request is served
+        first and fully before any budget reaches the next one.
+        """
+        if not needs:
+            return []
+        self.rounds += 1
+        budget = self.prefill_budget(n_active_decode)
+        if budget == 0:
+            self.starved_rounds += 1
+            return []
+        plan: List[Tuple[int, int]] = []
+        for slot_id, need in needs:
+            if budget <= 0:
+                break
+            take = min(need, budget)
+            if take > 0:
+                plan.append((slot_id, take))
+                budget -= take
+        self.chunks += len(plan)
+        self.prefill_tokens += sum(t for _, t in plan)
+        return plan
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {
+            "token_budget": self.config.token_budget,
+            "rounds": self.rounds,
+            "prefill_chunks": self.chunks,
+            "prefill_tokens": self.prefill_tokens,
+            "starved_rounds": self.starved_rounds,
+        }

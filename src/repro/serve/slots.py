@@ -12,13 +12,27 @@ The serve engine treats the batch axis as *slots*: requests are admitted
 into free slots and evicted at completion, so it needs batched select
 (masked state updates during packed prefill) and scatter (installing a new
 request's prefilled state into its slot) that know where the batch axis is.
+
+An occupied slot is in one of two states (:class:`SlotState`): under the
+chunked-prefill scheduler (``serve/scheduler.py``) a request holds its
+slot while its prompt is still being prefilled chunk by chunk
+(``PREFILLING``) before it joins the fused decode loop (``DECODING``);
+the blocking admission path admits straight into ``DECODING``.
 """
 from __future__ import annotations
 
+import enum
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+
+
+class SlotState(enum.Enum):
+    """Lifecycle state of an occupied serve-engine slot."""
+
+    PREFILLING = "prefilling"  # prompt chunks still being fed (scheduler mode)
+    DECODING = "decoding"      # in the fused decode loop, generating tokens
 
 
 def _batched_where(new, old, active: jax.Array, batch_axis: int):

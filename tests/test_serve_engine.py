@@ -160,9 +160,9 @@ def test_staggered_budgets_leave_at_step_granularity(key):
     eng = ServeEngine(model, params,
                       ServeConfig(max_slots=2, max_len=32, chunk_steps=8))
     ids = [eng.submit(p, g) for p, g in zip(prompts, (2, 7, 5))]
-    eng.run()
+    by_id = {o.request_id: o for o in eng.run()}
     for rid, g, p in zip(ids, (2, 7, 5), prompts):
-        o = eng._finished[rid]
+        o = by_id[rid]
         assert o.gen_len == g
         ref = _per_request_greedy(model, params, p, g, 32)
         np.testing.assert_array_equal(o.tokens, ref)
@@ -179,6 +179,9 @@ def test_eos_stops_early(key):
     assert out.gen_len <= 12
     assert out.tokens[-1] == eos
     assert eos not in out.tokens[:-1]
+    # EOS truncated a fused chunk: timing must count delivered tokens only
+    assert out.timing.mean_itl_s >= 0.0
+    assert out.wall_time_s >= out.timing.ttft_s
 
 
 # ------------------------------------------------- fused vs per-step loop
