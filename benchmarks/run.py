@@ -17,8 +17,8 @@ import time
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 from benchmarks import (
-    accuracy, energy_breakdown, energy_comparison, pairing_ablation, roofline,
-    serve_throughput, speedup, vdpe_scaling,
+    accuracy, decode_attn, energy_breakdown, energy_comparison,
+    pairing_ablation, roofline, serve_throughput, speedup, vdpe_scaling,
 )
 
 SECTIONS = {
@@ -33,6 +33,7 @@ SECTIONS = {
     "serve_throughput": serve_throughput.run,  # ISSUE 1: fused vs per-step decode
     "kv_cache": serve_throughput.run_kv_cache,  # ISSUE 3: shared-prefix TTFT
     "scheduler": serve_throughput.run_scheduler,  # ISSUE 4: chunked-prefill ITL
+    "decode_attn": decode_attn.run,         # ISSUE 5: gather-free paged decode
 }
 
 

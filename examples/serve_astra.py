@@ -12,7 +12,9 @@ docs/PLANS.md), ``--kv-block-size`` / ``--no-prefix-cache`` for the
 paged KV cache with radix-tree prefix reuse (docs/SERVING.md), and
 ``--prefill-chunk-tokens`` for the chunked-prefill scheduler that
 interleaves prompt chunks with decode so long prompts never stall
-in-flight requests (docs/SERVING.md §Scheduling).
+in-flight requests (docs/SERVING.md §Scheduling), and ``--attn-impl
+flash`` for the Pallas attention kernels — gather-free streaming decode
+over the paged pool (docs/SERVING.md §Decode-attention memory model).
 
   PYTHONPATH=src python examples/serve_astra.py [--arch stablelm-1.6b]
 """

@@ -8,6 +8,8 @@ Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec),
 * ``int8_matmul``    — ASTRA expectation fast path (MXU int8, output-stationary)
 * ``flash_attention``— streaming-softmax attention (causal + sliding window)
 * ``rglru_scan``     — chunked linear recurrence for RG-LRU/SSM blocks
+* ``paged_attention``— gather-free serve-engine decode/suffix-prefill over
+  the paged KV pool (block tables as scalar-prefetch operands)
 
 Kernels target TPU (VMEM BlockSpecs, 128-aligned tiles) and are validated
 on CPU with ``interpret=True``.

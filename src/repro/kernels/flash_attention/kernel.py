@@ -2,8 +2,11 @@
 
 Serves the prefill path of every attention arch (global and local blocks
 share this kernel — ``window=0`` means unbounded causal context).  GQA is
-handled by the wrapper (queries grouped per KV head), so the kernel sees
-matched Q/KV head counts folded into the leading grid dim.
+handled by the wrapper (queries grouped per KV head): the ``G`` query
+heads sharing a KV head are stacked over the query axis and ``q_len``
+tells the kernel the fold period, so each K/V tile is read once per
+*group* rather than once per query head.  Logit softcap (``tanh(s/c)*c``,
+pre-mask) matches the ``_sdpa`` ordering.
 
 Blocking: grid = (BH, Sq/bq, Sk/bk) with the K dim innermost & sequential.
 Online softmax state (running max m, denominator l) and the un-normalized
@@ -25,7 +28,8 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal, window, bq, bk):
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal, window,
+            bq, bk, q_len, softcap):
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
@@ -40,9 +44,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal, window, 
     s = jax.lax.dot_general(
         q, k, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale  # [bq, bk]
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
 
     iq = pl.program_id(1)
     q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], k.shape[0]), 0)
+    if q_len:
+        # GQA fold: query rows are G head groups stacked over q_len real
+        # positions — row r of the folded axis sits at position r % q_len
+        q_pos = q_pos % q_len
     k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], k.shape[0]), 1)
     mask = jnp.ones_like(s, dtype=jnp.bool_)
     if causal:
@@ -70,7 +80,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal, window, 
     o_ref[0] = o_new
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "causal", "window", "bq", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window", "bq",
+                                             "bk", "q_len", "softcap", "interpret"))
 def flash_attention_kernel(
     q: jax.Array,  # [BH, Sq, D]
     k: jax.Array,  # [BH, Sk, D]
@@ -81,12 +92,15 @@ def flash_attention_kernel(
     window: int = 0,
     bq: int = 128,
     bk: int = 128,
+    q_len: int = 0,  # GQA fold period: row r is query position r % q_len (0 = identity)
+    softcap: float = 0.0,
     interpret: bool = True,
 ):
     bh, sq, d = q.shape
     sk = k.shape[1]
     assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
-    kern = functools.partial(_kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk)
+    kern = functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                             bq=bq, bk=bk, q_len=q_len, softcap=softcap)
     o, m, l = pl.pallas_call(
         kern,
         grid=(bh, sq // bq, sk // bk),

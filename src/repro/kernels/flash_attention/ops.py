@@ -9,7 +9,8 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
 def flash_attention(
     q: jax.Array,  # [B, Hq, Sq, D]
     k: jax.Array,  # [B, Hkv, Sk, D]
@@ -17,6 +18,7 @@ def flash_attention(
     *,
     causal: bool = True,
     window: int = 0,
+    softcap: float = 0.0,
     bq: int = 128,
     bk: int = 128,
     interpret: bool = True,
@@ -25,17 +27,16 @@ def flash_attention(
     hkv, sk = k.shape[1], k.shape[2]
     assert hq % hkv == 0
     scale = d ** -0.5
-    # GQA: repeat KV heads to match Q heads, then fold (B, H) -> BH
-    if hkv != hq:
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
-    qf = q.reshape(b * hq, sq, d)
-    kf = k.reshape(b * hq, sk, d)
-    vf = v.reshape(b * hq, sk, d)
+    # GQA: fold the G query heads sharing each KV head over the query axis
+    # (rows [g*Sq + i] of pair (b, kvh)) — K/V are never repeated; the
+    # kernel recovers true positions via the q_len fold period
+    g = hq // hkv
+    qf = q.reshape(b * hkv, g * sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
     # pad sequence dims to block multiples; padded keys are masked by causal
     # + explicit key-validity (padded queries discarded on slice-out)
-    pq, pk = (-sq) % bq, (-sk) % bk
+    pq, pk = (-g * sq) % bq, (-sk) % bk
     if pq:
         qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
     if pk:
@@ -47,6 +48,7 @@ def flash_attention(
         # window covering exactly the valid span (encoder use is full-span)
         raise NotImplementedError("non-causal padding unsupported; pad inputs to block size")
     o, _, _ = flash_attention_kernel(
-        qf, kf, vf, scale=scale, causal=causal, window=eff_window, bq=bq, bk=bk, interpret=interpret
+        qf, kf, vf, scale=scale, causal=causal, window=eff_window, bq=bq, bk=bk,
+        q_len=sq, softcap=softcap, interpret=interpret,
     )
-    return o[:, :sq].reshape(b, hq, sq, d).astype(q.dtype)
+    return o[:, : g * sq].reshape(b, hkv, g, sq, d).reshape(b, hq, sq, d).astype(q.dtype)

@@ -1,0 +1,7 @@
+from repro.kernels.paged_attention.ops import (
+    dense_attention_decode, paged_attention_decode, paged_attention_prefill,
+)
+
+__all__ = [
+    "dense_attention_decode", "paged_attention_decode", "paged_attention_prefill",
+]

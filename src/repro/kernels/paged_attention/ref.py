@@ -1,0 +1,68 @@
+"""Pure-jnp oracle: the gathered-view computation the kernel replaces.
+
+Deliberately written as gather-then-mask (``pool[table]`` -> dense
+logical view -> masked softmax): the kernel must be bit-compatible with
+the memory-hungry formulation it optimizes away.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _gather(pool, table):
+    """pool [n_blocks, KVH, bs, hd], table [B, W] -> [B, KVH, W*bs, hd]."""
+    b, w = table.shape
+    g = pool[table]  # [B, W, KVH, bs, hd]
+    return jnp.moveaxis(g, 2, 1).reshape(b, pool.shape[1], -1, pool.shape[3])
+
+
+def _softcap(s, softcap):
+    return jnp.tanh(s / softcap) * softcap if softcap > 0 else s
+
+
+def _masked_attn(qg, k, v, mask, scale, softcap):
+    """qg [B,KVH,G,Sq,hd], k/v [B,KVH,L,hd], mask [B,Sq,L] -> [B,KVH,G,Sq,hd]."""
+    qg, k, v = (x.astype(jnp.float32) for x in (qg, k, v))
+    s = _softcap(jnp.einsum("bhgsd,bhld->bhgsl", qg, k) * scale, softcap)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhgsl,bhld->bhgsd", p / denom, v)
+
+
+def paged_decode_ref(q, k_pool, v_pool, table, kv_len, *, softcap=0.0):
+    """q [B, H, hd] -> [B, H, hd] (fp32): keys at positions >= kv_len[b]
+    are invisible; kv_len == 0 yields zeros (matching the kernel)."""
+    b, h, hd = q.shape
+    kvh = k_pool.shape[1]
+    k = _gather(k_pool, table)
+    v = _gather(v_pool, table)
+    mask = jnp.arange(k.shape[2])[None, None] < kv_len[:, None, None]  # [B,1,L]
+    qg = q.reshape(b, kvh, h // kvh, 1, hd)
+    o = _masked_attn(qg, k, v, mask, hd ** -0.5, softcap)
+    return jnp.where(kv_len[:, None, None] > 0, o.reshape(b, h, hd), 0.0)
+
+
+def paged_prefill_ref(q, k_pool, v_pool, table, start, *, softcap=0.0):
+    """q [B, H, S, hd] -> [B, H, S, hd] (fp32): causal against absolute
+    positions ``start[b] + i`` over the gathered context view."""
+    b, h, s, hd = q.shape
+    kvh = k_pool.shape[1]
+    k = _gather(k_pool, table)
+    v = _gather(v_pool, table)
+    q_pos = start[:, None] + jnp.arange(s)[None]  # [B, S]
+    mask = q_pos[:, :, None] >= jnp.arange(k.shape[2])[None, None]  # [B,S,L]
+    qg = q.reshape(b, kvh, h // kvh, s, hd)
+    return _masked_attn(qg, k, v, mask, hd ** -0.5, softcap).reshape(b, h, s, hd)
+
+
+def dense_decode_ref(q, k, v, kv_len, *, softcap=0.0):
+    """q [B, H, hd], k/v [B, KVH, S, hd] -> [B, H, hd] (fp32)."""
+    b, h, hd = q.shape
+    kvh = k.shape[1]
+    mask = jnp.arange(k.shape[2])[None, None] < kv_len[:, None, None]
+    qg = q.reshape(b, kvh, h // kvh, 1, hd)
+    o = _masked_attn(qg, k, v, mask, hd ** -0.5, softcap)
+    return jnp.where(kv_len[:, None, None] > 0, o.reshape(b, h, hd), 0.0)

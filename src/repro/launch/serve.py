@@ -123,7 +123,8 @@ def _run_engine(model, params, prompts, args, sampler):
                       chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed,
                       kv_block_size=args.kv_block_size,
                       prefix_cache=not args.no_prefix_cache,
-                      prefill_chunk_tokens=args.prefill_chunk_tokens)
+                      prefill_chunk_tokens=args.prefill_chunk_tokens,
+                      attn_impl=args.attn_impl)
     # warm run on a throwaway engine: the jitted prefill/chunk programs are
     # memoized per model, so the timed run below measures serving, not XLA
     # compilation
@@ -171,6 +172,13 @@ def _validate_kv_flags(ap: argparse.ArgumentParser, args) -> None:
             "negative; pass a per-round token budget (docs/SERVING.md "
             "§Scheduling) or 0 for blocking full-prompt admission"
         )
+    if args.attn_impl not in ModelOptions.ATTN_IMPLS:
+        ap.error(
+            f"--attn-impl: {args.attn_impl!r} unknown; valid: "
+            f"{', '.join(ModelOptions.ATTN_IMPLS)} (flash routes decode "
+            "through the gather-free paged-attention kernel where the "
+            "plan keeps qk/pv exact)"
+        )
 
 
 def main(argv=None):
@@ -207,6 +215,13 @@ def main(argv=None):
                     help="chunked-prefill scheduler token budget per round "
                          "(docs/SERVING.md §Scheduling); 0 = blocking "
                          "full-prompt admission")
+    ap.add_argument("--attn-impl", default="naive",
+                    help="attention implementation (docs/SERVING.md "
+                         "§Decode-attention memory model): naive = jnp "
+                         "einsum; flash = Pallas kernels (gather-free "
+                         "streaming decode over the paged pool, flash "
+                         "prefill; interpret mode on CPU — correct but "
+                         "slow off-TPU)")
     ap.add_argument("--compare-exact", action="store_true",
                     help="also run exact mode and report token agreement")
     ap.add_argument("--seed", type=int, default=0)

@@ -20,7 +20,16 @@ Serving caches come in two layouts (docs/SERVING.md):
 
 The softmax attention itself defaults to jnp einsum (XLA-native; gives the
 dry-run an honest FLOP/byte profile) and can be swapped for the Pallas
-flash kernel (``use_flash``) — both validated against each other in tests.
+kernels (``use_flash`` on the sequence path, ``use_kernel`` on the decode
+and suffix-prefill paths) — all validated against each other in tests.
+
+``use_kernel`` routes decode through ``kernels.paged_attention``: paged
+caches stream K/V blocks straight from the pool via the block table (the
+gathered ``_paged_view`` copy is never materialized), dense caches run a
+length-masked single-query kernel instead of full-``max_len`` ``_sdpa``,
+and paged suffix prefill streams its context the same way.  Like flash,
+the kernels implement exact qk/pv only — when the plan quantizes either
+dynamic site the astra-batched path is used and the kernel is bypassed.
 
 GEMM sites: the projections are ``q_proj / kv_proj / o_proj`` (kv_proj
 covers both wk and wv, matching the simulator's fused KV op); the
@@ -207,7 +216,8 @@ def attn_seq(
     if use_flash and kind != "xattn" and _dyn_exact(qk_b) and _dyn_exact(pv_b):
         from repro.kernels.flash_attention import flash_attention
 
-        o = flash_attention(q, k, v, causal=causal, window=window)
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=cfg.logit_softcap)
     else:
         o = _sdpa(q, k, v, causal=causal, window=window, softcap=cfg.logit_softcap,
                   qk=qk_b, pv=pv_b)
@@ -307,6 +317,7 @@ def attn_decode(
     kind: str,
     sites: Union[ComputeConfig, SiteBinding] = EXACT,
     tables: Optional[BlockTables] = None,
+    use_kernel: bool = False,
 ) -> Tuple[jax.Array, Union[KVCache, PagedKVCache]]:
     b = x.shape[0]
     sites = as_binding(sites)
@@ -338,9 +349,16 @@ def attn_decode(
             slot_v = pos_v
             kv_len = pos_v + 1
         cache = _paged_write_token(cache, tables.table, slot_v, k_new, v_new)
-        k_log, v_log = _paged_view(cache, tables.table)
-        o = _sdpa(q, k_log, v_log, causal=False, window=0, kv_len=kv_len,
-                  softcap=cfg.logit_softcap, qk=qk_b, pv=pv_b)
+        if use_kernel and _dyn_exact(qk_b) and _dyn_exact(pv_b):
+            from repro.kernels.paged_attention import paged_attention_decode
+
+            o = paged_attention_decode(q[:, :, 0], cache.k, cache.v,
+                                       tables.table, kv_len,
+                                       softcap=cfg.logit_softcap)[:, :, None]
+        else:
+            k_log, v_log = _paged_view(cache, tables.table)
+            o = _sdpa(q, k_log, v_log, causal=False, window=0, kv_len=kv_len,
+                      softcap=cfg.logit_softcap, qk=qk_b, pv=pv_b)
         return dense(p["wo"], _merge_heads(o), sites("o_proj")), cache
     s_cache = cache.k.shape[2]
     # global caches are pre-allocated >= pos+1 (no wrap); local rings wrap
@@ -357,11 +375,18 @@ def attn_decode(
     if kind == "local":
         # ring buffer: every resident entry is within the window; valid count
         kv_len = jnp.minimum(pos + 1, s_cache)
-        o = _sdpa(q, k, v, causal=False, window=0, kv_len=kv_len, softcap=cfg.logit_softcap,
-                  qk=qk_b, pv=pv_b)
     else:
-        o = _sdpa(q, k, v, causal=False, window=0, kv_len=pos + 1, softcap=cfg.logit_softcap,
-                  qk=qk_b, pv=pv_b)
+        kv_len = pos + 1
+    if use_kernel and _dyn_exact(qk_b) and _dyn_exact(pv_b):
+        from repro.kernels.paged_attention import dense_attention_decode
+
+        o = dense_attention_decode(
+            q[:, :, 0], k, v, jnp.broadcast_to(kv_len, (b,)),
+            softcap=cfg.logit_softcap,
+        )[:, :, None]
+    else:
+        o = _sdpa(q, k, v, causal=False, window=0, kv_len=kv_len,
+                  softcap=cfg.logit_softcap, qk=qk_b, pv=pv_b)
     out = dense(p["wo"], _merge_heads(o), sites("o_proj"))
     return out, KVCache(k, v)
 
@@ -401,6 +426,7 @@ def attn_prefill_paged(
     *,
     sites: Union[ComputeConfig, SiteBinding] = EXACT,
     ctx_blocks: int,
+    use_kernel: bool = False,
 ) -> Tuple[jax.Array, PagedKVCache]:
     """Suffix prefill with past: global causal attention over the packed
     suffixes against prefix KV already resident in the pool.
@@ -429,9 +455,16 @@ def attn_prefill_paged(
         _paged_write_span(cache.v, table, start, v),
     )
     ctx_tbl = jax.lax.slice(table, (0, 0), (b, ctx_blocks))
-    k_log, v_log = _paged_view(cache, ctx_tbl)
-    o = _sdpa(q, k_log, v_log, causal=True, window=0, q_offset=start,
-              softcap=cfg.logit_softcap, qk=sites("qk"), pv=sites("pv"))
+    qk_b, pv_b = sites("qk"), sites("pv")
+    if use_kernel and _dyn_exact(qk_b) and _dyn_exact(pv_b):
+        from repro.kernels.paged_attention import paged_attention_prefill
+
+        o = paged_attention_prefill(q, cache.k, cache.v, ctx_tbl, start,
+                                    softcap=cfg.logit_softcap)
+    else:
+        k_log, v_log = _paged_view(cache, ctx_tbl)
+        o = _sdpa(q, k_log, v_log, causal=True, window=0, q_offset=start,
+                  softcap=cfg.logit_softcap, qk=qk_b, pv=pv_b)
     o = shard_act(o, ("batch", "heads", None, None))
     out = shard_act(dense(p["wo"], _merge_heads(o), sites("o_proj")), ("batch", None, None))
     return out, cache

@@ -46,13 +46,25 @@ class ModelOptions:
 
     plan: Optional[Union[ExecutionPlan, str, dict, ComputeConfig]] = None
     cc: Optional[ComputeConfig] = None  # DEPRECATED -> uniform plan
-    attn_impl: str = "naive"  # naive | flash (Pallas, interpret on CPU)
+    # naive = jnp einsum everywhere; flash = Pallas attention kernels
+    # (interpret on CPU): flash_attention on the sequence path, the
+    # gather-free paged_attention kernels on decode and paged suffix
+    # prefill.  Kernels cover exact qk/pv only — quantized dynamic sites
+    # fall back to the astra-batched path per site.
+    attn_impl: str = "naive"
     use_rglru_kernel: bool = False
     remat: bool = True
     capacity_factor: float = 1.25
     z_loss: float = 1e-4
 
+    ATTN_IMPLS = ("naive", "flash")
+
     def __post_init__(self):
+        if self.attn_impl not in self.ATTN_IMPLS:
+            raise ValueError(
+                f"attn_impl={self.attn_impl!r} unknown; valid: "
+                f"{', '.join(self.ATTN_IMPLS)}"
+            )
         plan = self.plan
         if plan is None:
             plan = ExecutionPlan.uniform(self.cc if self.cc is not None else EXACT)
@@ -129,7 +141,8 @@ def block_apply_decode(p, x, state, pos, cfg: ArchConfig, kind: str,
     h = norm_apply(p["pre_norm"], x, cfg.norm, cfg.norm_eps)
     if kind in ("attn", "local", "xattn"):
         out, state = attn.attn_decode(p["core"], h, state, pos, cfg, kind=kind,
-                                      sites=sites, tables=block_tables)
+                                      sites=sites, tables=block_tables,
+                                      use_kernel=(opts.attn_impl == "flash"))
     elif kind == "rglru":
         out, state = rglru_mod.rglru_decode(p["core"], h, state, cfg, sites)
     elif kind == "mlstm":
@@ -302,7 +315,8 @@ def _block_apply_suffix(p, x, state, table, start, cfg: ArchConfig,
     sites = opts.plan.binding("attn", layers)
     h = norm_apply(p["pre_norm"], x, cfg.norm, cfg.norm_eps)
     out, state = attn.attn_prefill_paged(
-        p["core"], h, state, table, start, cfg, sites=sites, ctx_blocks=ctx_blocks
+        p["core"], h, state, table, start, cfg, sites=sites, ctx_blocks=ctx_blocks,
+        use_kernel=(opts.attn_impl == "flash"),
     )
     x = x + out
     if _has_mlp(cfg, "attn"):

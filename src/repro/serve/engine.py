@@ -101,6 +101,13 @@ class ServeConfig:
     # token budget shared between decode (priority) and prefill; 0 keeps
     # the blocking full-prompt admission
     prefill_chunk_tokens: int = 0
+    # attention implementation (docs/SERVING.md §Decode-attention memory
+    # model): "naive" = jnp einsum (gathered logical view on paged
+    # layouts); "flash" = Pallas kernels — gather-free streaming decode /
+    # suffix prefill over the block table, flash full-sequence prefill.
+    # None inherits the model's own ModelOptions.attn_impl; a string
+    # overrides it for this engine.
+    attn_impl: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -181,6 +188,16 @@ class ServeEngine:
         the execution plan for this engine, overriding the model's own."""
         if plan is not None:
             model = model.with_plan(plan)
+        if (config.attn_impl is not None
+                and config.attn_impl != model.opts.attn_impl):
+            # the engine owns the serving execution options: without this
+            # override no Pallas attention path is reachable from serving
+            # (callers habitually pass Model(cfg) with default opts).
+            # ModelOptions.__post_init__ validates the value.
+            model = dataclasses.replace(
+                model, opts=dataclasses.replace(model.opts,
+                                                attn_impl=config.attn_impl)
+            )
         cfg = model.cfg
         # every GEMM site this model executes must resolve 1:1 to a
         # simulator op — the accounting below attributes energy by site
