@@ -30,9 +30,23 @@ than one bounded dispatch (0 = blocking full-prompt admission).  Each
 request reports measured queue wait / TTFT / inter-token latency next to
 the modeled chip cost.
 
+``--traffic-trace`` switches from one-shot batch serving to open-loop
+trace replay through the admission-controlled front-end
+(docs/SERVING.md §Traffic, SLOs, and backpressure): requests arrive on
+the trace's schedule, ``--max-queue`` bounds the waiting line,
+``--queue-timeout`` sheds stale waiters, and the run ends with the SLO
+scorecard (p50/p95/p99 TTFT + ITL, rejection rate, goodput).  The trace
+is either a JSON file written by ``repro.traffic`` or an inline spec
+like ``chat:rate=4,n=32,seed=0`` (suites: chat, longdoc, agent, mixed).
+``--virtual-step`` replays in deterministic virtual time instead of
+wall time.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
       --batch 4 --prompt-len 32 --gen 16 --mode int8 --compare-exact
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+      --traffic-trace 'mixed:rate=8,n=32' --max-queue 16 --queue-timeout 2 \
+      --max-slots 4 --virtual-step 0.05
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
       --prompt-mix 16,32,64 --batch 6 --gen 16 --temperature 0.8 --top-k 40
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
@@ -181,6 +195,110 @@ def _validate_kv_flags(ap: argparse.ArgumentParser, args) -> None:
         )
 
 
+def _validate_traffic_flags(ap: argparse.ArgumentParser, args) -> None:
+    """Validate the open-loop replay flags at the CLI (FrontendConfig
+    re-checks its own invariants at construction)."""
+    if not args.traffic_trace:
+        for flag, val, default in (("--max-queue", args.max_queue, -1),
+                                   ("--queue-timeout", args.queue_timeout, 0.0),
+                                   ("--virtual-step", args.virtual_step, 0.0)):
+            if val != default:
+                ap.error(f"{flag} only applies to open-loop replay; pass "
+                         "--traffic-trace <file or spec> to select it")
+        return
+    if args.max_queue < -1:
+        ap.error(f"--max-queue: {args.max_queue} is invalid; pass a queue "
+                 "capacity >= 0 (0 = no waiting room) or -1 for unbounded")
+    if args.queue_timeout < 0:
+        ap.error(f"--queue-timeout: {args.queue_timeout} is negative; pass "
+                 "a timeout in seconds > 0, or 0 to disable")
+    if args.virtual_step < 0:
+        ap.error(f"--virtual-step: {args.virtual_step} is negative; pass a "
+                 "virtual round time in seconds > 0, or 0 for wall-clock "
+                 "replay")
+    if args.compare_exact:
+        ap.error("--compare-exact is not supported with --traffic-trace "
+                 "(the replay already checks streamed-vs-terminal parity)")
+
+
+def _load_trace(ap: argparse.ArgumentParser, spec: str, cfg):
+    """``--traffic-trace`` accepts a JSON trace file or an inline spec."""
+    import os
+
+    from repro.traffic import TrafficTrace, generate_trace, parse_trace_spec
+
+    if os.path.exists(spec):
+        return TrafficTrace.load(spec)
+    try:
+        kw = parse_trace_spec(spec)
+    except ValueError as e:
+        ap.error(f"--traffic-trace: {spec!r} is neither a file nor a valid "
+                 f"spec: {e}")
+    return generate_trace(vocab=cfg.vocab, n_codebooks=cfg.n_codebooks, **kw)
+
+
+def _run_traffic(model, params, trace, args, sampler):
+    """Open-loop replay: admission front-end + SLO scorecard."""
+    from repro.serve import FrontendConfig, ServeFrontend
+    from repro.traffic import SLOConfig, VirtualClock, evaluate, replay_trace, trace_max_len
+
+    block = args.kv_block_size
+    max_len = trace_max_len(trace)
+    if block:
+        max_len = -(-max_len // block) * block
+    serve_cfg = ServeConfig(
+        max_slots=args.max_slots or 4, max_len=max_len,
+        chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed,
+        kv_block_size=block, prefix_cache=not args.no_prefix_cache,
+        prefill_chunk_tokens=args.prefill_chunk_tokens,
+        attn_impl=args.attn_impl)
+    fe_cfg = FrontendConfig(
+        max_queue_depth=None if args.max_queue < 0 else args.max_queue,
+        queue_timeout_s=args.queue_timeout or None,
+        max_concurrency=None)
+    virtual = args.virtual_step > 0
+
+    def stack(force_virtual=False):
+        clk = VirtualClock() if (virtual or force_virtual) else None
+        eng = ServeEngine(model, params, serve_cfg, chip=AstraChipConfig(),
+                          clock=clk)
+        return ServeFrontend(eng, fe_cfg, clock=clk)
+
+    # warm pass on a throwaway stack in virtual time (no sleeps): the
+    # jitted programs are memoized per model, so the replay below
+    # measures serving, not XLA compilation
+    replay_trace(stack(force_virtual=True), trace,
+                 virtual_step_s=args.virtual_step or 0.05)
+    result = replay_trace(stack(), trace,
+                          virtual_step_s=args.virtual_step if virtual else None)
+    slo = (SLOConfig(args.slo_ttft, args.slo_itl)
+           if args.slo_ttft > 0 and args.slo_itl > 0 else None)
+    m = evaluate(result.outputs, result.duration_s, slo,
+                 offered_rps=trace.rate_rps)
+    clock_kind = f"virtual step={args.virtual_step}s" if virtual else "wall"
+    print(f"[traffic] {trace.suite} trace: {len(trace)} requests at "
+          f"{trace.rate_rps:g} rps ({trace.arrival}), replayed in "
+          f"{result.duration_s:.2f}s ({clock_kind})")
+    print(f"  completed {m['n_completed']}/{m['n_offered']} "
+          f"({m['completed_tok_s']:.1f} tok/s), rejected {m['n_rejected']} "
+          f"{m['rejected_by_reason'] or ''}")
+    st = result.stats
+    print(f"  queue: p50 wait {m['queue_p50_s'] * 1e3:.1f} ms, high-water "
+          f"depth {st['max_queue_depth']}"
+          + (f" (cap {fe_cfg.max_queue_depth})"
+             if fe_cfg.max_queue_depth is not None else ""))
+    print(f"  TTFT p50/p95/p99: {m['ttft_p50_s'] * 1e3:.1f} / "
+          f"{m['ttft_p95_s'] * 1e3:.1f} / {m['ttft_p99_s'] * 1e3:.1f} ms")
+    print(f"  ITL  p50/p95/p99: {m['itl_p50_s'] * 1e3:.2f} / "
+          f"{m['itl_p95_s'] * 1e3:.2f} / {m['itl_p99_s'] * 1e3:.2f} ms "
+          f"(max {m['itl_max_s'] * 1e3:.2f} ms)")
+    if slo is not None:
+        print(f"  SLO (ttft<={slo.ttft_s}s, itl<={slo.itl_s}s): "
+              f"{m['n_slo_met']}/{m['n_offered']} met "
+              f"({m['slo_attainment']:.0%}), goodput {m['goodput_rps']:.2f} rps")
+    return result.outputs
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -225,8 +343,31 @@ def main(argv=None):
     ap.add_argument("--compare-exact", action="store_true",
                     help="also run exact mode and report token agreement")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--traffic-trace", default="",
+                    help="open-loop replay instead of one-shot batch: a "
+                         "trace JSON written by repro.traffic, or an inline "
+                         "spec like 'chat:rate=4,n=32,seed=0' "
+                         "(docs/SERVING.md §Traffic)")
+    ap.add_argument("--max-queue", type=int, default=-1,
+                    help="admission queue capacity (0 = no waiting room, "
+                         "-1 = unbounded); overflow is rejected as "
+                         "queue_full")
+    ap.add_argument("--queue-timeout", type=float, default=0.0,
+                    help="reject requests waiting longer than this many "
+                         "seconds (queue_timeout); 0 = wait forever")
+    ap.add_argument("--virtual-step", type=float, default=0.0,
+                    help="replay on a virtual clock, each engine round "
+                         "costing this many virtual seconds (deterministic "
+                         "latencies); 0 = wall-clock replay")
+    ap.add_argument("--slo-ttft", type=float, default=0.0,
+                    help="TTFT bound in seconds for the goodput line "
+                         "(0 with --slo-itl 0 = percentiles only)")
+    ap.add_argument("--slo-itl", type=float, default=0.0,
+                    help="max inter-token-gap bound in seconds for the "
+                         "goodput line")
     args = ap.parse_args(argv)
     _validate_kv_flags(ap, args)
+    _validate_traffic_flags(ap, args)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -248,6 +389,9 @@ def main(argv=None):
         cal_tokens, _ = pack_prompts(prompts, cfg)
         model = model.calibrate(params, {"tokens": cal_tokens})
         print(f"calibrated {len(model.plan.act_scales)} site activation scales")
+    if args.traffic_trace:
+        trace = _load_trace(ap, args.traffic_trace, cfg)
+        return _run_traffic(model, params, trace, args, sampler)
     outs, tps, engine = _run_engine(model, params, prompts, args, sampler)
     print(f"[{plan_label}] {len(outs)} requests (prompt lens {sorted(set(lengths))}), "
           f"{args.gen} new tokens each: {tps:.1f} tok/s")

@@ -22,10 +22,21 @@ Public surface:
   bounded prefill dispatch per round.
 * :class:`~repro.serve.accounting.RequestTiming` — measured queue/TTFT/
   ITL latency carried on every :class:`RequestOutput`.
+* :class:`~repro.serve.frontend.ServeFrontend` /
+  :class:`~repro.serve.frontend.FrontendConfig` /
+  :class:`~repro.serve.frontend.TokenStream` — the open-loop front-end
+  (docs/SERVING.md §Traffic, SLOs, and backpressure): bounded admission
+  queue, queue-timeout / queue-full load shedding with visible
+  ``reject_reason``, per-token streaming over the engine's incremental
+  drain path.  Driven at load by :mod:`repro.traffic`.
 """
 from repro.serve.accounting import RequestTiming
 from repro.serve.decode_loop import make_fused_decode, unfused_decode
 from repro.serve.engine import Request, RequestOutput, ServeConfig, ServeEngine
+from repro.serve.frontend import (
+    REJECT_QUEUE_FULL, REJECT_QUEUE_TIMEOUT, FrontendConfig, ServeFrontend,
+    TokenStream,
+)
 from repro.serve.kv_pool import KVBlockPool
 from repro.serve.prefill import (
     full_seq_packable, pack_prompts, packed_prefill, prefill_paged_suffix,
@@ -38,11 +49,16 @@ from repro.serve.slots import SlotState
 
 __all__ = [
     "GREEDY",
+    "FrontendConfig",
     "KVBlockPool",
+    "REJECT_QUEUE_FULL",
+    "REJECT_QUEUE_TIMEOUT",
     "RadixPrefixTree",
     "Request",
     "RequestOutput",
     "RequestTiming",
+    "ServeFrontend",
+    "TokenStream",
     "SamplerConfig",
     "SchedulerConfig",
     "ServeConfig",

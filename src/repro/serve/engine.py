@@ -55,7 +55,7 @@ import dataclasses
 import time
 from collections import deque
 from functools import lru_cache
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +132,11 @@ class RequestOutput:
     wall_time_s: float  # submit -> completion, true end to end
     hardware: Optional[RequestHardwareReport] = None
     timing: Optional[RequestTiming] = None  # queue/TTFT/ITL breakdown
+    # set by the admission front-end (serve/frontend.py) when the request
+    # was refused instead of served: "queue_full" | "queue_timeout".
+    # Rejected requests still get this terminal output — they never
+    # silently vanish — with empty tokens and queue-wait-only timing.
+    reject_reason: Optional[str] = None
 
     @property
     def gen_len(self) -> int:
@@ -183,9 +188,25 @@ def _kv_deterministic(model: Model) -> bool:
 
 class ServeEngine:
     def __init__(self, model: Model, params, config: ServeConfig = ServeConfig(),
-                 chip: Optional[AstraChipConfig] = None, plan=None):
+                 chip: Optional[AstraChipConfig] = None, plan=None,
+                 clock: Optional[Callable[[], float]] = None,
+                 token_sink: Optional[Callable[[int, np.ndarray], None]] = None):
         """``plan`` (optional, any ``ExecutionPlan.from_spec`` form) selects
-        the execution plan for this engine, overriding the model's own."""
+        the execution plan for this engine, overriding the model's own.
+
+        ``clock`` (optional) replaces ``time.time`` for every timestamp the
+        engine takes (submission, admission, token arrivals, completion) —
+        the traffic replay harness injects a virtual clock here so latency
+        trajectories are deterministic (docs/SERVING.md §Traffic).
+
+        ``token_sink`` (optional) is the incremental drain path: called as
+        ``sink(request_id, tokens)`` the moment generated tokens exist on
+        the host — the first sampled token at admission, then one call per
+        fused decode chunk (EOS-trimmed, so the concatenation of a
+        request's sink calls is exactly its final ``RequestOutput.tokens``).
+        Finished outputs still flow through the ``run()``/``step()`` outbox
+        exactly once; the sink only adds early visibility.
+        """
         if plan is not None:
             model = model.with_plan(plan)
         if (config.attn_impl is not None
@@ -206,6 +227,8 @@ class ServeEngine:
         self.params = params
         self.config = config
         self.chip = chip or AstraChipConfig()
+        self.clock = clock or time.time
+        self.token_sink = token_sink
         self._fused = make_fused_decode(model)
         self._queue: deque[Request] = deque()
         self._slots: List[Optional[_Slot]] = [None] * config.max_slots
@@ -280,23 +303,48 @@ class ServeEngine:
         )
 
     # ------------------------------------------------------------- intake
-    def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None) -> int:
+    def check_request(self, prompt, max_new_tokens: int) -> np.ndarray:
+        """Canonicalize and validate a request; returns the int32 prompt.
+
+        Shared with the admission front-end (serve/frontend.py) so invalid
+        requests raise at intake — before a queue position or engine id is
+        ever taken."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.shape[-1] == 0:
             raise ValueError("empty prompt: a request needs at least one "
                              "prompt token (its logits seed sampling)")
+        if max_new_tokens < 0:
+            raise ValueError(f"max_new_tokens={max_new_tokens} is negative")
         if prompt.shape[-1] + max_new_tokens > self.config.max_len:
             raise ValueError(
                 f"prompt_len {prompt.shape[-1]} + max_new {max_new_tokens} "
                 f"exceeds max_len {self.config.max_len}"
             )
+        return prompt
+
+    def allocate_request_id(self) -> int:
+        """Reserve the next request id without enqueueing anything — the
+        front-end ids requests at *its* admission time so a later reject
+        and a served request share one id space."""
         rid = self._next_id
         self._next_id += 1
-        req = Request(rid, prompt, max_new_tokens, eos_id, t_submit=time.time())
+        return rid
+
+    def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None,
+               request_id: Optional[int] = None,
+               t_submit: Optional[float] = None) -> int:
+        """Enqueue a request.  ``request_id`` (from ``allocate_request_id``)
+        and ``t_submit`` let the front-end keep its own admission time as
+        the latency anchor — queue/TTFT then include front-end backpressure
+        waits, not just the engine-side queue."""
+        prompt = self.check_request(prompt, max_new_tokens)
+        rid = self.allocate_request_id() if request_id is None else request_id
+        req = Request(rid, prompt, max_new_tokens, eos_id,
+                      t_submit=self.clock() if t_submit is None else t_submit)
         if max_new_tokens == 0:
             # nothing to decode: complete without ever taking a slot
-            self._complete(req, [], t_admit=req.t_submit, t_first=req.t_submit,
-                           events=[])
+            now = self.clock()
+            self._complete(req, [], t_admit=now, t_first=now, events=[])
         else:
             self._queue.append(req)
         return rid
@@ -403,7 +451,7 @@ class ServeEngine:
     # ------------------------------------------------- blocking admission
     def _admit_blocking(self, slot_ids: List[int]):
         reqs = [self._queue.popleft() for _ in range(len(slot_ids))]
-        t_admit = time.time()
+        t_admit = self.clock()
         if self._paged:
             slot_ids, reqs, last_logits, cached = self._prefill_paged(slot_ids, reqs)
             if not reqs:
@@ -416,13 +464,14 @@ class ServeEngine:
         ids = jnp.asarray(slot_ids, jnp.int32)
         self._cur_tok = self._cur_tok.at[ids].set(first)
         first_np = np.asarray(first)  # [n, 1] or [n, C, 1]
-        t_first = time.time()
+        t_first = self.clock()
         for j, (i, req) in enumerate(zip(slot_ids, reqs)):
             tok0 = first_np[j]  # [1] or [C, 1]
             slot = _Slot(req, SlotState.DECODING, pos=req.prompt_len,
                          remaining=req.max_new_tokens - 1, filled=req.prompt_len,
                          generated=[tok0], cached=cached[j], t_admit=t_admit,
                          t_first=t_first, events=[(t_first, 1)])
+            self._emit_tokens(req, tok0)
             if self._hit_eos(req, tok0) or slot.remaining == 0:
                 self._retire(slot)
                 self._release_blocks(i)
@@ -510,7 +559,7 @@ class ServeEngine:
     def _admit_chunked(self, slot_ids: List[int]):
         """Claim free slots for waiting requests as PREFILLING — no prefill
         work here; the scheduler feeds their prompts in bounded chunks."""
-        t_admit = time.time()
+        t_admit = self.clock()
         new_dense: List[int] = []
         for i in slot_ids:
             if not self._queue:
@@ -638,7 +687,7 @@ class ServeEngine:
         ids = jnp.asarray(slot_ids, jnp.int32)
         self._cur_tok = self._cur_tok.at[ids].set(first)
         first_np = np.asarray(first)
-        t_first = time.time()
+        t_first = self.clock()
         for j, i in enumerate(slot_ids):
             slot = self._slots[i]
             req = slot.req
@@ -649,6 +698,7 @@ class ServeEngine:
             slot.generated = [tok0]
             slot.t_first = t_first
             slot.events = [(t_first, 1)]
+            self._emit_tokens(req, tok0)
             self._prefilling.remove(i)
             if self._paged:
                 self._install_blocks(i, self._slot_blocks[i], into_table=True)
@@ -706,11 +756,12 @@ class ServeEngine:
         self._states = states
         self._cur_tok = next_tok
         toks_np = np.asarray(toks)  # [B, steps] or [B, C, steps]
-        t_now = time.time()
+        t_now = self.clock()
         for i in active:
             slot = self._slots[i]
             slot.generated.append(toks_np[i])
             slot.events.append((t_now, steps))
+            self._emit_tokens(slot.req, toks_np[i])
             slot.pos += steps
             slot.remaining -= steps
             if slot.remaining == 0 or self._hit_eos(slot.req, toks_np[i]):
@@ -723,6 +774,25 @@ class ServeEngine:
         if req.eos_id is None or toks.ndim > 1:  # no EOS over codebook grids
             return False
         return bool(np.any(toks == req.eos_id))
+
+    def _trim_eos(self, req: Request, toks: np.ndarray) -> np.ndarray:
+        """Clip a token chunk at the request's first EOS (inclusive) —
+        the same truncation ``_retire`` applies to the concatenated output,
+        so streamed chunks match the final tokens exactly."""
+        if req.eos_id is None or toks.ndim > 1:
+            return toks
+        hits = np.nonzero(toks == req.eos_id)[0]
+        return toks[: hits[0] + 1] if hits.size else toks
+
+    def _emit_tokens(self, req: Request, toks: np.ndarray) -> None:
+        """Incremental drain: push freshly generated host tokens to the
+        registered sink (EOS-trimmed).  The sink sees every request's
+        tokens exactly once, in order; finished ``RequestOutput``s still
+        go through the outbox."""
+        if self.token_sink is not None:
+            toks = self._trim_eos(req, toks)
+            if toks.shape[-1]:
+                self.token_sink(req.id, toks)
 
     def _retire(self, slot: _Slot):
         gen = np.concatenate(slot.generated, axis=-1)
@@ -751,7 +821,7 @@ class ServeEngine:
                 self.model.cfg, self.chip, req.prompt_len, int(gen.shape[-1]),
                 cached_prompt_len=cached,
             )
-        timing = request_timing(req.t_submit, t_admit, t_first, events, time.time())
+        timing = request_timing(req.t_submit, t_admit, t_first, events, self.clock())
         self._outbox.append(RequestOutput(
             req.id, req.prompt, gen, timing.wall_time_s, hw, timing
         ))

@@ -1,0 +1,35 @@
+"""Deterministic open-loop traffic generation, replay, and SLO scoring.
+
+The package splits cleanly into a *pure* half and a *time-passing* half:
+
+* pure — :mod:`repro.traffic.arrivals` (Poisson / bursty arrival
+  processes), :mod:`repro.traffic.scenarios` (chat / longdoc / agent
+  fan-out suites), :mod:`repro.traffic.trace` (materialized replayable
+  traces; JSON round-trip; CLI spec parsing).  No wall clock anywhere:
+  a trace is a pure function of ``(suite, rate, n, seed)``.
+* time-passing — :mod:`repro.traffic.replay` drives a
+  :class:`~repro.serve.frontend.ServeFrontend` with a trace on either a
+  :class:`VirtualClock` (fully deterministic latency trajectories) or
+  the wall clock; :mod:`repro.traffic.slo` folds the resulting
+  ``RequestTiming``s into p50/p95/p99 TTFT + ITL, rejection rate, and
+  SLO-goodput (``benchmarks/traffic.py`` sweeps offered load with it).
+"""
+from repro.traffic.arrivals import (
+    ARRIVAL_PROCESSES, bursty_arrivals, poisson_arrivals,
+)
+from repro.traffic.replay import ReplayResult, VirtualClock, replay_trace
+from repro.traffic.scenarios import SUITES, Scenario, suite_max_total_len
+from repro.traffic.slo import PERCENTILES, SLOConfig, evaluate
+from repro.traffic.trace import (
+    TracedRequest, TrafficTrace, generate_trace, parse_trace_spec,
+    suite_engine_max_len, trace_max_len,
+)
+
+__all__ = [
+    "ARRIVAL_PROCESSES", "bursty_arrivals", "poisson_arrivals",
+    "ReplayResult", "VirtualClock", "replay_trace",
+    "SUITES", "Scenario", "suite_max_total_len",
+    "PERCENTILES", "SLOConfig", "evaluate",
+    "TracedRequest", "TrafficTrace", "generate_trace", "parse_trace_spec",
+    "suite_engine_max_len", "trace_max_len",
+]

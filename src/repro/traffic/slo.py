@@ -1,0 +1,104 @@
+"""SLO evaluation: fold per-request timings into a serving scorecard.
+
+The serving layer is judged on *percentile latency at offered load*, not
+mean throughput: p50/p95/p99 time-to-first-token (TTFT) and inter-token
+latency (ITL), the rejection rate, and **SLO-goodput** — the rate of
+requests that completed *and* met their latency bounds (rejected or
+SLO-violating work counts for nothing).  This module turns a replayed
+trace's :class:`~repro.serve.engine.RequestOutput` list (which carries
+the PR4 ``RequestTiming`` events) into exactly that scorecard; the
+offered-load sweep in ``benchmarks/traffic.py`` records it per load
+point into ``BENCH_traffic.json``.
+
+Percentile conventions: TTFT percentiles are over completed requests'
+``ttft_s``; ITL percentiles are over completed requests' ``mean_itl_s``
+(per-request mean), with the worst single gap tracked separately as
+``itl_max_s``.  A request meets its SLO iff it completed with
+``ttft_s <= slo.ttft_s`` **and** ``max_itl_s <= slo.itl_s`` (max, not
+mean — a single long stall is a violation the user saw).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import RequestOutput
+
+PERCENTILES = (50, 95, 99)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Per-request latency bounds (seconds).  ``ttft_s`` bounds submission
+    to first token; ``itl_s`` bounds the worst inter-token gap."""
+
+    ttft_s: float
+    itl_s: float
+
+    def __post_init__(self):
+        if self.ttft_s <= 0:
+            raise ValueError(f"ttft_s={self.ttft_s} must be > 0")
+        if self.itl_s <= 0:
+            raise ValueError(f"itl_s={self.itl_s} must be > 0")
+
+    def met_by(self, out: RequestOutput) -> bool:
+        if out.reject_reason is not None or out.timing is None:
+            return False
+        return (out.timing.ttft_s <= self.ttft_s
+                and out.timing.max_itl_s <= self.itl_s)
+
+
+def _pcts(xs: Sequence[float]) -> Dict[str, float]:
+    if not xs:
+        return {f"p{p}": 0.0 for p in PERCENTILES}
+    arr = np.asarray(xs, np.float64)
+    return {f"p{p}": float(np.percentile(arr, p)) for p in PERCENTILES}
+
+
+def evaluate(outputs: Sequence[RequestOutput], duration_s: float,
+             slo: Optional[SLOConfig] = None,
+             offered_rps: Optional[float] = None) -> Dict:
+    """Score one replayed trace.
+
+    ``outputs`` is everything the front-end delivered — completions and
+    rejections; ``duration_s`` is the replay span (virtual or wall) used
+    as the rate denominator.  Returns a flat JSON-ready dict.
+    """
+    done: List[RequestOutput] = [o for o in outputs if o.reject_reason is None]
+    rejected = [o for o in outputs if o.reject_reason is not None]
+    by_reason: Dict[str, int] = {}
+    for o in rejected:
+        by_reason[o.reject_reason] = by_reason.get(o.reject_reason, 0) + 1
+    ttfts = [o.timing.ttft_s for o in done if o.timing is not None]
+    itls = [o.timing.mean_itl_s for o in done if o.timing is not None]
+    queue = [o.timing.queue_time_s for o in outputs if o.timing is not None]
+    n = len(outputs)
+    dur = max(duration_s, 1e-9)
+    n_good = sum(1 for o in done if slo.met_by(o)) if slo is not None else len(done)
+    rep = {
+        "n_offered": n,
+        "n_completed": len(done),
+        "n_rejected": len(rejected),
+        "rejected_by_reason": by_reason,
+        "rejection_rate": len(rejected) / max(n, 1),
+        "duration_s": duration_s,
+        "offered_rps": (offered_rps if offered_rps is not None else n / dur),
+        "completed_rps": len(done) / dur,
+        "completed_tok_s": sum(o.gen_len for o in done) / dur,
+        "queue_p50_s": float(np.percentile(queue, 50)) if queue else 0.0,
+        **{f"ttft_{k}_s": v for k, v in _pcts(ttfts).items()},
+        **{f"itl_{k}_s": v for k, v in _pcts(itls).items()},
+        "itl_max_s": max((o.timing.max_itl_s for o in done
+                          if o.timing is not None), default=0.0),
+    }
+    if slo is not None:
+        rep.update({
+            "slo_ttft_s": slo.ttft_s,
+            "slo_itl_s": slo.itl_s,
+            "n_slo_met": n_good,
+            "slo_attainment": n_good / max(n, 1),
+            "goodput_rps": n_good / dur,
+        })
+    return rep

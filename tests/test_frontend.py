@@ -1,0 +1,270 @@
+"""Open-loop serving front-end (docs/SERVING.md §Traffic, SLOs, and
+backpressure).
+
+The load-bearing claims:
+
+* per-token streaming is token-identical and exactly-once vs the batch
+  ``run()`` path — on the dense layout, under the paged KV cache with
+  prefix reuse, and under the chunked-prefill scheduler;
+* finished requests can be drained mid-stream without disturbing the
+  streams still in flight, and outputs are handed over exactly once;
+* admission control is visible: queue-full and queue-timeout rejections
+  produce terminal outputs with ``reject_reason`` and queue-wait-only
+  timing (nothing silently vanishes), and the waiting line's high-water
+  mark respects ``max_queue_depth``;
+* ``Request.t_submit`` anchors at *front-end* admission, so time spent
+  under backpressure shows up in ``RequestTiming.queue_time_s``;
+* the config surface rejects nonsense values with the offending value
+  in the message.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.astra_layer import ComputeConfig
+from repro.models.model import Model
+from repro.models.transformer import ModelOptions
+from repro.serve import (
+    REJECT_QUEUE_FULL, REJECT_QUEUE_TIMEOUT, FrontendConfig, ServeConfig,
+    ServeEngine, ServeFrontend,
+)
+from repro.traffic import VirtualClock
+
+
+def _model(arch="stablelm-1.6b", mode="exact", **red):
+    cfg = get_arch(arch).reduced(**red)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    return Model(cfg, ModelOptions(cc=ComputeConfig(mode)))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (cfg.n_codebooks,) if cfg.n_codebooks else ()
+    return [rng.integers(0, cfg.vocab, shape + (l,), dtype=np.int32)
+            for l in lens]
+
+
+@pytest.fixture(scope="module")
+def model_params(key):
+    model = _model()
+    return model, model.init(key)
+
+
+@pytest.fixture(scope="module")
+def key():
+    import jax
+
+    return jax.random.PRNGKey(0)
+
+
+def _stack(model, params, fe_cfg=FrontendConfig(), clock=None, **serve_kw):
+    serve_kw.setdefault("max_slots", 4)
+    serve_kw.setdefault("max_len", 96)
+    serve_kw.setdefault("chunk_steps", 4)
+    eng = ServeEngine(model, params, ServeConfig(
+        astra_accounting=False, **serve_kw), clock=clock)
+    return ServeFrontend(eng, fe_cfg, clock=clock)
+
+
+# ------------------------------------------------------------- streaming
+@pytest.mark.parametrize("serve_kw", [
+    {},  # dense per-slot layout
+    {"kv_block_size": 16, "prefix_cache": True},  # paged + prefix cache
+    {"kv_block_size": 16, "prefill_chunk_tokens": 32},  # chunked prefill
+], ids=["dense", "paged_prefix", "chunked_prefill"])
+def test_stream_token_identical_to_run(model_params, serve_kw):
+    model, params = model_params
+    lens, gen = [7, 16, 16, 31], 12
+    prompts = _prompts(model.cfg, lens)
+
+    # reference: batch path on a fresh engine
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=4, max_len=96, chunk_steps=4, astra_accounting=False,
+        **serve_kw))
+    ref = {o.request_id: o.tokens
+           for o in eng.generate_batch(prompts, gen)}
+
+    fe = _stack(model, params, **serve_kw)
+    streams = [fe.stream(p, gen) for p in prompts]
+    for s, (rid, want) in zip(streams, sorted(ref.items())):
+        toks = list(s)  # pumps on demand
+        assert s.finished and s.output is not None
+        got = (np.stack(toks, axis=-1) if toks
+               else np.zeros(want.shape[:-1] + (0,), np.int32))
+        assert np.array_equal(got, want)
+        assert np.array_equal(s.output.tokens, want)
+    # exactly-once: outputs drain once, then never again
+    outs = fe.drain()
+    assert sorted(o.request_id for o in outs) == [s.request_id for s in streams]
+    assert fe.drain() == [] and fe.run() == []
+
+
+def test_callback_matches_stream(model_params):
+    model, params = model_params
+    fe = _stack(model, params)
+    [prompt] = _prompts(model.cfg, [9])
+    chunks = []
+    rid = fe.submit(prompt, 10, on_tokens=chunks.append)
+    outs = fe.run()
+    assert [o.request_id for o in outs] == [rid]
+    assert np.array_equal(np.concatenate(chunks, axis=-1), outs[0].tokens)
+    # chunked delivery, not one blob per token nor one call at the end
+    assert sum(c.shape[-1] for c in chunks) == 10
+
+
+def test_mid_stream_drain_of_finished_request(model_params):
+    model, params = model_params
+    short, long_ = _prompts(model.cfg, [8, 8])
+    fe = _stack(model, params)
+    s_short = fe.stream(short, 2)
+    s_long = fe.stream(long_, 24)
+    long_toks = []
+    while not s_short.finished:
+        long_toks.append(next(s_long))
+    # the short request finished mid-stream: drain it now, exactly once
+    drained = fe.drain()
+    assert [o.request_id for o in drained] == [s_short.request_id]
+    assert np.array_equal(
+        np.stack(list(s_short), axis=-1) if s_short.output.gen_len else
+        np.zeros((0,), np.int32), s_short.output.tokens)
+    long_toks.extend(s_long)
+    assert np.array_equal(np.stack(long_toks, axis=-1), s_long.output.tokens)
+    remaining = fe.drain()
+    assert [o.request_id for o in remaining] == [s_long.request_id]
+
+
+def test_stream_gen_len_zero(model_params):
+    model, params = model_params
+    fe = _stack(model, params)
+    [p] = _prompts(model.cfg, [5])
+    s = fe.stream(p, 0)
+    assert s.finished and s.output.gen_len == 0
+    assert list(s) == []
+    assert [o.request_id for o in fe.drain()] == [s.request_id]
+
+
+def test_eos_trimmed_stream_matches_output(model_params):
+    model, params = model_params
+    # pick the greedy model's own next token as EOS so it fires mid-gen
+    [p] = _prompts(model.cfg, [11])
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=1, max_len=96, chunk_steps=4, astra_accounting=False))
+    [ref] = eng.generate_batch([p], 16)
+    eos = int(np.asarray(ref.tokens).reshape(-1)[3])  # a token it will emit
+    fe = _stack(model, params)
+    s = fe.stream(p, 16, eos_id=eos)
+    toks = list(s)
+    assert np.array_equal(np.stack(toks, axis=-1), s.output.tokens)
+    if s.output.gen_len < 16:  # EOS actually hit: stream ends exactly there
+        assert int(np.asarray(toks[-1]).reshape(-1)[0]) == eos
+
+
+# ------------------------------------------------------------- rejection
+def test_queue_full_rejection_is_visible(model_params):
+    model, params = model_params
+    clk = VirtualClock()
+    fe = _stack(model, params,
+                FrontendConfig(max_queue_depth=1, max_concurrency=1),
+                clock=clk, max_slots=1)
+    prompts = _prompts(model.cfg, [6, 6, 6])
+    rids = [fe.submit(p, 4) for p in prompts]
+    # slot 1 in flight, slot 2 waiting, slot 3 over the bound -> rejected
+    rejected = fe.drain()
+    assert [o.request_id for o in rejected] == [rids[2]]
+    assert rejected[0].reject_reason == REJECT_QUEUE_FULL
+    assert rejected[0].gen_len == 0
+    assert rejected[0].timing is not None
+    served = fe.run()
+    assert sorted(o.request_id for o in served) == rids[:2]
+    assert all(o.reject_reason is None for o in served)
+    st = fe.stats
+    assert st["rejected_queue_full"] == 1 and st["completed"] == 2
+    assert st["max_queue_depth"] <= 1
+
+
+def test_queue_timeout_rejection_counts_wait(model_params):
+    model, params = model_params
+    clk = VirtualClock()
+    fe = _stack(model, params,
+                FrontendConfig(max_concurrency=1, queue_timeout_s=0.5),
+                clock=clk, max_slots=1)
+    blocker, waiter = _prompts(model.cfg, [6, 6])
+    rid_b = fe.submit(blocker, 8)
+    rid_w = fe.submit(waiter, 8)
+    clk.advance(0.75)  # past the timeout while still queued
+    fe.pump()
+    outs = fe.drain()
+    by_id = {o.request_id: o for o in outs}
+    assert by_id[rid_w].reject_reason == REJECT_QUEUE_TIMEOUT
+    assert by_id[rid_w].timing.queue_time_s == pytest.approx(0.75)
+    rest = fe.run()
+    assert rid_b in {o.request_id for o in outs} | {o.request_id for o in rest}
+    assert fe.stats["rejected_queue_timeout"] == 1
+
+
+def test_queue_wait_anchored_at_frontend_submit(model_params):
+    model, params = model_params
+    clk = VirtualClock()
+    fe = _stack(model, params, FrontendConfig(max_concurrency=1),
+                clock=clk, max_slots=1)
+    first, second = _prompts(model.cfg, [6, 6])
+    fe.submit(first, 6)
+    rid2 = fe.submit(second, 6)
+    # hold the second request at the front-end while the first serves
+    while fe.stats["queue_depth"]:
+        clk.advance(0.05)
+        fe.pump()
+    outs = fe.run()
+    out2 = next(o for o in outs if o.request_id == rid2)
+    # its measured queue time covers the *front-end* wait, not just the
+    # engine-internal admission gap
+    assert out2.timing.queue_time_s >= 0.05
+
+
+def test_rejected_stream_is_terminal(model_params):
+    model, params = model_params
+    fe = _stack(model, params,
+                FrontendConfig(max_queue_depth=0, max_concurrency=1),
+                max_slots=1)
+    a, b = _prompts(model.cfg, [6, 6])
+    s_ok = fe.stream(a, 4)
+    s_no = fe.stream(b, 4)
+    assert s_no.finished and s_no.output.reject_reason == REJECT_QUEUE_FULL
+    assert list(s_no) == []
+    assert np.array_equal(np.stack(list(s_ok), axis=-1), s_ok.output.tokens)
+
+
+# ------------------------------------------------------------ validation
+def test_frontend_config_validation():
+    with pytest.raises(ValueError, match="max_queue_depth=-1"):
+        FrontendConfig(max_queue_depth=-1)
+    with pytest.raises(ValueError, match="queue_timeout_s=0"):
+        FrontendConfig(queue_timeout_s=0)
+    with pytest.raises(ValueError, match="queue_timeout_s=-2.5"):
+        FrontendConfig(queue_timeout_s=-2.5)
+    with pytest.raises(ValueError, match="max_concurrency=0"):
+        FrontendConfig(max_concurrency=0)
+
+
+def test_max_concurrency_capped_by_slots(model_params):
+    model, params = model_params
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=2, max_len=64, astra_accounting=False))
+    with pytest.raises(ValueError, match="max_concurrency=5"):
+        ServeFrontend(eng, FrontendConfig(max_concurrency=5))
+
+
+def test_engine_submit_validation(model_params):
+    model, params = model_params
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=1, max_len=16, astra_accounting=False))
+    shape = ((model.cfg.n_codebooks, 0) if model.cfg.n_codebooks else (0,))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.zeros(shape, np.int32), 4)
+    [p] = _prompts(model.cfg, [8])
+    with pytest.raises(ValueError, match="max_new_tokens=-1"):
+        eng.submit(p, -1)
+    with pytest.raises(ValueError):
+        eng.submit(p, 100)  # 8 + 100 > max_len=16

@@ -1,0 +1,254 @@
+"""Traffic generation, replay determinism, and SLO scoring
+(docs/SERVING.md §Traffic, SLOs, and backpressure).
+
+The load-bearing claims:
+
+* trace generation is a pure function of its arguments — bit-identical
+  arrivals, prompts, and budgets across calls, with no wall clock in
+  the generator — and traces round-trip through JSON;
+* arrival processes hit their offered rate (Poisson in expectation,
+  bursty with the same mean but clustered), monotonically;
+* shared-prefix scenarios draw their prefixes from a fixed pool, so
+  prefix reuse survives across traces with different seeds;
+* a virtual-clock replay through a fresh engine + front-end stack is
+  fully deterministic: identical token streams, identical latency
+  trajectories, identical SLO metrics across runs;
+* the SLO evaluator's arithmetic: percentiles, rejection accounting,
+  attainment and goodput.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.astra_layer import ComputeConfig
+from repro.models.model import Model
+from repro.models.transformer import ModelOptions
+from repro.serve import (
+    FrontendConfig, RequestOutput, RequestTiming, ServeConfig, ServeEngine,
+    ServeFrontend,
+)
+from repro.traffic import (
+    SUITES, Scenario, SLOConfig, TrafficTrace, VirtualClock, bursty_arrivals,
+    evaluate, generate_trace, parse_trace_spec, poisson_arrivals, replay_trace,
+    trace_max_len,
+)
+
+
+# ------------------------------------------------------------- arrivals
+def test_poisson_arrivals_deterministic_and_calibrated():
+    a = poisson_arrivals(4.0, 4000, np.random.default_rng(1))
+    b = poisson_arrivals(4.0, 4000, np.random.default_rng(1))
+    assert np.array_equal(a, b)
+    assert np.all(np.diff(a) >= 0)
+    # mean rate within 10% at n=4000
+    assert 4000 / a[-1] == pytest.approx(4.0, rel=0.1)
+
+
+def test_bursty_arrivals_same_mean_rate_but_clustered():
+    rng = np.random.default_rng(2)
+    t = bursty_arrivals(8.0, 4096, rng, burst_size=8)
+    assert len(t) == 4096 and np.all(np.diff(t) >= 0)
+    assert 4096 / t[-1] == pytest.approx(8.0, rel=0.15)
+    # bursts: most inter-arrival gaps are exactly zero
+    assert np.mean(np.diff(t) == 0) > 0.5
+
+
+def test_arrival_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="rate_rps=0"):
+        poisson_arrivals(0, 4, rng)
+    with pytest.raises(ValueError, match="burst_size=0"):
+        bursty_arrivals(1.0, 4, rng, burst_size=0)
+
+
+# ------------------------------------------------------------ scenarios
+def test_scenario_validation():
+    with pytest.raises(ValueError, match="prompt_lens"):
+        Scenario("s", prompt_lens=(), gen_lens=(4,))
+    with pytest.raises(ValueError, match="shared_prefix_len 8"):
+        Scenario("s", prompt_lens=(8,), gen_lens=(4,), shared_prefix_len=8)
+    with pytest.raises(ValueError, match="weight"):
+        Scenario("s", prompt_lens=(8,), gen_lens=(4,), weight=0)
+
+
+def test_agent_suite_shares_prefixes_across_seeds():
+    scen = SUITES["agent"][0]
+    t1 = generate_trace("agent", 2.0, 16, seed=1, vocab=64)
+    t2 = generate_trace("agent", 2.0, 16, seed=99, vocab=64)
+    pre1 = {r.prompt[: scen.shared_prefix_len].tobytes() for r in t1.requests}
+    pre2 = {r.prompt[: scen.shared_prefix_len].tobytes() for r in t2.requests}
+    # the prefix pool is seeded by the *scenario*, not the trace: both
+    # traces draw from the same n_prefixes prefixes
+    assert pre1 == pre2 and len(pre1) <= scen.n_prefixes
+
+
+# ---------------------------------------------------------------- trace
+def test_trace_generation_deterministic():
+    t1 = generate_trace("mixed", 3.0, 32, seed=5, vocab=64)
+    t2 = generate_trace("mixed", 3.0, 32, seed=5, vocab=64)
+    assert len(t1) == len(t2) == 32
+    for a, b in zip(t1.requests, t2.requests):
+        assert a.arrival_s == b.arrival_s
+        assert np.array_equal(a.prompt, b.prompt)
+        assert a.max_new_tokens == b.max_new_tokens and a.scenario == b.scenario
+    t3 = generate_trace("mixed", 3.0, 32, seed=6, vocab=64)
+    assert any(not np.array_equal(a.prompt, b.prompt)
+               for a, b in zip(t1.requests, t3.requests))
+
+
+def test_trace_json_roundtrip(tmp_path):
+    t = generate_trace("chat", 2.0, 8, seed=0, vocab=64)
+    path = str(tmp_path / "trace.json")
+    t.save(path)
+    back = TrafficTrace.load(path)
+    assert back.suite == t.suite and len(back) == len(t)
+    for a, b in zip(t.requests, back.requests):
+        assert a.arrival_s == b.arrival_s and np.array_equal(a.prompt, b.prompt)
+    # the file is plain JSON (inspectable, diffable)
+    with open(path) as f:
+        assert json.load(f)["suite"] == "chat"
+
+
+def test_parse_trace_spec():
+    kw = parse_trace_spec("longdoc:rate=2.5,n=64,seed=9,arrival=bursty")
+    assert kw == {"suite": "longdoc", "rate_rps": 2.5, "n": 64, "seed": 9,
+                  "arrival": "bursty"}
+    assert parse_trace_spec("chat")["rate_rps"] == 1.0  # defaults
+    with pytest.raises(ValueError, match="unknown suite"):
+        parse_trace_spec("nope:rate=1")
+    with pytest.raises(ValueError, match="unknown trace spec key"):
+        parse_trace_spec("chat:bogus=1")
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        parse_trace_spec("chat:arrival=warp")
+
+
+# ------------------------------------------------------------------ SLO
+def _out(rid, ttft, max_itl, mean_itl=None, reject=None, gen=4, queue=0.0):
+    timing = RequestTiming(queue_time_s=queue, ttft_s=ttft, wall_time_s=ttft,
+                           mean_itl_s=mean_itl if mean_itl is not None else max_itl,
+                           max_itl_s=max_itl, n_token_events=gen)
+    toks = np.zeros((0 if reject else gen,), np.int32)
+    return RequestOutput(rid, np.zeros((4,), np.int32), toks,
+                         wall_time_s=ttft, timing=timing, reject_reason=reject)
+
+
+def test_slo_evaluate_arithmetic():
+    outs = [_out(0, 0.1, 0.01), _out(1, 0.2, 0.05),
+            _out(2, 0.9, 0.01),             # TTFT violation
+            _out(3, 0.1, 0.50),             # ITL violation
+            _out(4, 0.0, 0.0, reject="queue_full", queue=0.3),
+            _out(5, 0.0, 0.0, reject="queue_timeout", queue=2.0)]
+    m = evaluate(outs, duration_s=10.0, slo=SLOConfig(ttft_s=0.5, itl_s=0.1),
+                 offered_rps=0.6)
+    assert m["n_offered"] == 6 and m["n_completed"] == 4 and m["n_rejected"] == 2
+    assert m["rejected_by_reason"] == {"queue_full": 1, "queue_timeout": 1}
+    assert m["rejection_rate"] == pytest.approx(2 / 6)
+    assert m["n_slo_met"] == 2
+    assert m["slo_attainment"] == pytest.approx(2 / 6)
+    assert m["goodput_rps"] == pytest.approx(0.2)
+    assert m["completed_rps"] == pytest.approx(0.4)
+    assert m["completed_tok_s"] == pytest.approx(1.6)
+    assert m["ttft_p50_s"] == pytest.approx(np.percentile([0.1, 0.2, 0.9, 0.1], 50))
+    assert m["itl_max_s"] == pytest.approx(0.5)
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError, match="ttft_s=0"):
+        SLOConfig(ttft_s=0, itl_s=1)
+    with pytest.raises(ValueError, match="itl_s=-1"):
+        SLOConfig(ttft_s=1, itl_s=-1)
+
+
+def test_slo_empty_outputs():
+    m = evaluate([], duration_s=1.0)
+    assert m["n_offered"] == 0 and m["ttft_p99_s"] == 0.0
+
+
+# ---------------------------------------------------------------- replay
+def _model():
+    cfg = dataclasses.replace(get_arch("stablelm-1.6b").reduced(),
+                              dtype="float32")
+    model = Model(cfg, ModelOptions(cc=ComputeConfig("exact")))
+    return model, model.init(__import__("jax").random.PRNGKey(0))
+
+
+def test_virtual_clock():
+    clk = VirtualClock(2.0)
+    assert clk() == clk.now() == 2.0
+    clk.advance(0.5)
+    assert clk() == 2.5
+    with pytest.raises(ValueError, match="dt_s=-1"):
+        clk.advance(-1)
+
+
+def test_virtual_replay_requires_virtual_clock():
+    model, params = _model()
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=2, max_len=64, astra_accounting=False))
+    fe = ServeFrontend(eng, FrontendConfig())
+    trace = generate_trace("chat", 4.0, 2, seed=0, vocab=model.cfg.vocab)
+    with pytest.raises(ValueError, match="VirtualClock"):
+        replay_trace(fe, trace, virtual_step_s=0.05)
+    with pytest.raises(ValueError, match="virtual_step_s=-0.1"):
+        replay_trace(fe, trace, virtual_step_s=-0.1)
+
+
+def test_virtual_replay_deterministic_end_to_end():
+    model, params = _model()
+    trace = generate_trace("chat", 8.0, 10, seed=4, vocab=model.cfg.vocab)
+
+    def run_once():
+        clk = VirtualClock()
+        eng = ServeEngine(model, params, ServeConfig(
+            max_slots=2, max_len=trace_max_len(trace), chunk_steps=4,
+            astra_accounting=False), clock=clk)
+        fe = ServeFrontend(eng, FrontendConfig(max_queue_depth=4,
+                                               queue_timeout_s=1.0), clock=clk)
+        return replay_trace(fe, trace, virtual_step_s=0.05)
+
+    r1, r2 = run_once(), run_once()
+    assert r1.request_ids == r2.request_ids
+    assert r1.duration_s == r2.duration_s
+    o1, o2 = r1.outputs_by_id, r2.outputs_by_id
+    assert set(o1) == set(o2) == set(r1.request_ids)
+    for rid in r1.request_ids:
+        assert o1[rid].reject_reason == o2[rid].reject_reason
+        assert np.array_equal(o1[rid].tokens, o2[rid].tokens)
+        # streamed chunks concatenate to the terminal tokens, identically
+        assert np.array_equal(r1.token_streams[rid], r2.token_streams[rid])
+        if o1[rid].reject_reason is None:
+            assert np.array_equal(r1.token_streams[rid], o1[rid].tokens)
+        else:
+            assert r1.token_streams[rid].shape[-1] == 0
+        if o1[rid].timing is not None:
+            assert o1[rid].timing.ttft_s == o2[rid].timing.ttft_s
+            assert o1[rid].timing.queue_time_s == o2[rid].timing.queue_time_s
+    m1 = evaluate(r1.outputs, r1.duration_s, SLOConfig(0.5, 0.2))
+    m2 = evaluate(r2.outputs, r2.duration_s, SLOConfig(0.5, 0.2))
+    assert m1 == m2
+    assert r1.stats == r2.stats
+
+
+def test_overload_burst_bounded_and_accounted():
+    model, params = _model()
+    trace = generate_trace("chat", 50.0, 16, seed=3, vocab=model.cfg.vocab,
+                           arrival="bursty", burst_size=8)
+    clk = VirtualClock()
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=2, max_len=trace_max_len(trace), chunk_steps=4,
+        astra_accounting=False), clock=clk)
+    fe = ServeFrontend(eng, FrontendConfig(max_queue_depth=3,
+                                           queue_timeout_s=0.4), clock=clk)
+    r = replay_trace(fe, trace, virtual_step_s=0.05)
+    st = r.stats
+    # every offered request terminates exactly once, visibly
+    assert len(r.outputs) == 16
+    n_rej = st["rejected_queue_full"] + st["rejected_queue_timeout"]
+    assert st["completed"] + n_rej == 16 and n_rej > 0
+    assert st["max_queue_depth"] <= 3
+    for o in r.outputs:
+        if o.reject_reason is not None:
+            assert o.gen_len == 0 and o.timing is not None
