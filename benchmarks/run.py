@@ -27,7 +27,7 @@ import time
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 from benchmarks import (
-    accuracy, decode_attn, energy_breakdown, energy_comparison,
+    accuracy, decode_attn, energy_breakdown, energy_comparison, kv_quant,
     pairing_ablation, roofline, serve_throughput, speedup, traffic,
     vdpe_scaling,
 )
@@ -46,6 +46,7 @@ SECTIONS = {
     "scheduler": serve_throughput.run_scheduler,  # ISSUE 4: chunked-prefill ITL
     "decode_attn": decode_attn.run,         # ISSUE 5: gather-free paged decode
     "traffic": traffic.run_smoke,           # ISSUE 7: SLO-goodput vs load
+    "kv_quant": kv_quant.run,               # ISSUE 8: int8 paged KV blocks
 }
 
 # the one number per section worth tracking across PRs (key into the
@@ -59,6 +60,7 @@ HEADLINES = {
     "scheduler": "itl_improvement",
     "decode_attn": "speedup",
     "traffic": "peak_goodput_rps",
+    "kv_quant": "capacity_ratio",
 }
 
 # allocator/logging environment applied by --tune-env (SNIPPETS.md 1-2

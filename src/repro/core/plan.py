@@ -70,12 +70,20 @@ class _AbsMaxObserver:
 
     def __init__(self):
         self.amax: Dict[str, float] = {}
+        self.vec: Dict[str, np.ndarray] = {}  # KV sites: per-head absmax
 
     def record(self, sites: Tuple[str, ...], value) -> None:
         v = float(np.max(np.abs(np.asarray(value))))
         for s in sites:
             if v > self.amax.get(s, 0.0):
                 self.amax[s] = v
+
+    def record_vec(self, sites: Tuple[str, ...], value) -> None:
+        """Elementwise (per-KV-head) absmax for KV storage sites."""
+        v = np.asarray(value, np.float64)
+        for s in sites:
+            prev = self.vec.get(s)
+            self.vec[s] = v.copy() if prev is None else np.maximum(prev, v)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +97,10 @@ class ExecutionPlan:
     rules: Tuple[Tuple[str, ComputeConfig], ...] = ()
     default: ComputeConfig = EXACT
     act_scales: Tuple[Tuple[str, float], ...] = ()  # site -> static act scale
+    # KV *storage* sites (``L{li}.kv.{k,v}``) -> per-KV-head static scales.
+    # These quantize what the paged pool stores, not what a GEMM computes,
+    # so they live beside act_scales rather than inside any ComputeConfig.
+    kv_scales: Tuple[Tuple[str, Tuple[float, ...]], ...] = ()
     name: str = ""
     # Calibration tap.  compare=False keeps the plan hashable (observers
     # aren't value-comparable) — which also means an observing plan
@@ -136,6 +148,35 @@ class ExecutionPlan:
 
     def binding(self, kind: str, layers: Sequence[int]) -> "SiteBinding":
         return SiteBinding(self, tuple(f"L{li}.{kind}" for li in layers))
+
+    # ----------------------------------------------------------- KV storage
+    def kv_scale(self, site: str) -> Optional[Tuple[float, ...]]:
+        """Calibrated per-KV-head scales for one ``L{li}.kv.{k,v}`` site."""
+        for s, scales in self.kv_scales:
+            if s == site:
+                return scales
+        return None
+
+    def kv_group_scale(self, sites: Sequence[str]) -> Tuple[float, ...]:
+        """Per-head scales for a scanned group of KV storage sites.
+
+        Layers sharing a scanned trace share one observer tap, so their
+        recorded vectors are identical; the elementwise max is exact for
+        them and conservative otherwise.  Raises if any site is missing —
+        quantized KV storage without a calibrated scale is never legal.
+        """
+        vecs = []
+        for s in sites:
+            v = self.kv_scale(s)
+            if v is None:
+                raise ValueError(
+                    f"plan {self.name or self.rules!r} has no calibrated KV "
+                    f"scale for {s!r}; run Model.calibrate before enabling "
+                    "kv_quant (static scales keep cached KV a pure function "
+                    "of the token path)"
+                )
+            vecs.append(v)
+        return tuple(float(x) for x in np.max(np.asarray(vecs), axis=0))
 
     # --------------------------------------------------------- construction
     @staticmethod
@@ -217,7 +258,11 @@ class ExecutionPlan:
             (site, (amax / MAG_MAX) if amax > 0 else 1.0)
             for site, amax in obs.amax.items()
         ))
-        return dataclasses.replace(self, act_scales=scales)
+        kv = tuple(sorted(
+            (site, tuple((a / MAG_MAX) if a > 0 else 1.0 for a in vec))
+            for site, vec in obs.vec.items()
+        ))
+        return dataclasses.replace(self, act_scales=scales, kv_scales=kv)
 
 
 def _as_cc(val: Union[str, Mapping, ComputeConfig]) -> ComputeConfig:
@@ -265,6 +310,49 @@ def as_binding(cc: Union[ComputeConfig, SiteBinding]) -> SiteBinding:
     if isinstance(cc, SiteBinding):
         return cc
     return SiteBinding(ExecutionPlan.uniform(cc), ("block",))
+
+
+# ------------------------------------------------------------ KV storage sites
+# Paged KV *storage* sites are named ``L{li}.kv.{k,v}`` — per layer, not per
+# GEMM, because they quantize what the pool holds (post-rope keys, raw value
+# projections) rather than an executed matmul.  They are deliberately NOT in
+# ``model_sites``: the simulator op graph has no storage ops, and the 1:1
+# ``validate_site_registry`` cross-check must keep holding.
+_KV_KINDS = ("attn", "local")  # block kinds whose cache can live in the pool
+
+
+def kv_site_names(prefixes: Sequence[str], which: str) -> Tuple[str, ...]:
+    """``("L0.attn", "L2.attn"), "k"`` -> ``("L0.kv.k", "L2.kv.k")``."""
+    assert which in ("k", "v")
+    return tuple(f"{p.split('.', 1)[0]}.kv.{which}" for p in prefixes)
+
+
+def kv_sites(cfg: ArchConfig) -> Tuple[str, ...]:
+    """Every KV storage site of a config, in layer order."""
+    return tuple(
+        f"L{li}.kv.{which}"
+        for li, kind in enumerate(cfg.layer_kinds)
+        if kind in _KV_KINDS
+        for which in ("k", "v")
+    )
+
+
+def observe_kv(sites: SiteBinding, k, v) -> None:
+    """Calibration tap for KV storage sites: record per-KV-head absmax of
+    exactly what decode would store (post-rope k, raw v).  No-op unless the
+    binding's plan carries an observer (i.e. inside ``calibrate``)."""
+    obs = sites.plan._observer
+    if obs is None:
+        return
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    for which, x in (("k", k), ("v", v)):
+        names = kv_site_names(sites.prefixes, which)
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(0, 2, 3))
+        jax.debug.callback(functools.partial(obs.record_vec, names), amax)
 
 
 # The GEMM ops each block kind executes, named to match the simulator op

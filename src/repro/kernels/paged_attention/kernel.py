@@ -55,7 +55,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+def _kernel(lens_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
             scale, causal, q_len, bs, sk, softcap):
     """One (slot, kv-head, block) grid step of streaming-softmax attention.
 
@@ -65,9 +65,19 @@ def _kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
     partial trailing block padded by Pallas) are masked *and* their V rows
     zeroed, because out-of-range block padding is undefined (NaN in
     interpret mode) and ``0 * NaN`` would poison the accumulator.
+
+    ``ks_ref``/``vs_ref`` (static None when the pool is float) are
+    per-KV-head scale vectors for int8 pools: each streamed block is
+    dequantized *here*, fused into the grid step — no dense dequantized
+    view of the cache ever exists.
     """
     b = pl.program_id(0)
     j = pl.program_id(2)
+    # scale lookup stays OUTSIDE pl.when: program_id has no lowering rule
+    # inside the nested cond jaxpr under interpret mode
+    if ks_ref is not None:
+        h = pl.program_id(1)
+        ks, vs = ks_ref[h], vs_ref[h]
 
     @pl.when(j == 0)
     def _():
@@ -83,6 +93,9 @@ def _kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
         q = q_ref[0, 0]  # [R, hd]
         k = k_ref[0, 0]  # [bs, hd]
         v = v_ref[0, 0]
+        if ks_ref is not None:  # int8 pool: per-block fused dequantize
+            k = k.astype(jnp.float32) * ks
+            v = v.astype(jnp.float32) * vs
         if sk % bs:  # ragged trailing block possible (dense variant only)
             in_bounds = (j * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)) < sk
             v = jnp.where(in_bounds, v, 0.0)
@@ -136,6 +149,8 @@ def paged_attention_kernel(
     v_pool: jax.Array,  # [n_blocks, KVH, bs, hd]
     table: jax.Array,   # [B, W] int32 logical->physical block ids
     lens: jax.Array,    # [B] int32: kv_len (decode) or suffix start (causal)
+    k_scale: jax.Array = None,  # [KVH] f32 per-head scales (int8 pools)
+    v_scale: jax.Array = None,  # [KVH] f32
     *,
     scale: float,
     causal: bool = False,
@@ -143,17 +158,29 @@ def paged_attention_kernel(
     softcap: float = 0.0,
     interpret: bool = True,
 ):
-    """Streamed paged attention.  Returns un-normalized (o, m, l)."""
+    """Streamed paged attention.  Returns un-normalized (o, m, l).
+
+    Int8 pools (``k_pool.dtype == int8``) require calibrated per-KV-head
+    ``k_scale``/``v_scale`` vectors, ridden in as scalar-prefetch operands
+    and applied per streamed block inside the kernel body.
+    """
     b, kvh, r, hd = q.shape
     bs = k_pool.shape[2]
     w = table.shape[1]
+    quantized = k_pool.dtype == jnp.int8
+    if quantized and (k_scale is None or v_scale is None):
+        raise ValueError("int8 KV pool needs calibrated k_scale/v_scale")
     kern = functools.partial(_kernel, scale=scale, causal=causal, q_len=q_len,
                              bs=bs, sk=w * bs, softcap=softcap)
 
-    def body(tbl_ref, lens_ref, *refs):
-        return kern(lens_ref, *refs)
+    if quantized:
+        def body(tbl_ref, lens_ref, ks_ref, vs_ref, *refs):
+            return kern(lens_ref, ks_ref, vs_ref, *refs)
+    else:
+        def body(tbl_ref, lens_ref, *refs):
+            return kern(lens_ref, None, None, *refs)
 
-    def kv_index(bi, h, j, tbl, ln):
+    def kv_index(bi, h, j, tbl, ln, *rest):
         # clamp to the last live block: dead extent re-requests the same
         # physical block, which Pallas does not re-copy (no HBM traffic),
         # and pl.when skips its compute
@@ -161,21 +188,24 @@ def paged_attention_kernel(
                 else jnp.maximum(ln[bi] - 1, 0)) // bs
         return (tbl[bi, jnp.minimum(j, last)], h, 0, 0)
 
-    out_index = lambda bi, h, j, tbl, ln: (bi, h, 0, 0)
+    out_index = lambda bi, h, j, *rest: (bi, h, 0, 0)
     out_specs, out_shape = _carry_specs(b, kvh, r, hd, out_index)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(b, kvh, w),
         in_specs=[
-            pl.BlockSpec((1, 1, r, hd), lambda bi, h, j, tbl, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, r, hd), lambda bi, h, j, *rest: (bi, h, 0, 0)),
             pl.BlockSpec((1, 1, bs, hd), kv_index),
             pl.BlockSpec((1, 1, bs, hd), kv_index),
         ],
         out_specs=out_specs,
     )
+    operands = (table, lens) + (
+        (jnp.asarray(k_scale, jnp.float32), jnp.asarray(v_scale, jnp.float32))
+        if quantized else ())
     return pl.pallas_call(
         body, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
-    )(table, lens, q, k_pool, v_pool)
+    )(*operands, q, k_pool, v_pool)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "bk", "softcap", "interpret"))
@@ -201,6 +231,9 @@ def dense_attention_kernel(
     kern = functools.partial(_kernel, scale=scale, causal=False, q_len=1,
                              bs=bk, sk=sk, softcap=softcap)
 
+    def body(lens_ref, *refs):
+        return kern(lens_ref, None, None, *refs)
+
     def kv_index(bi, h, j, ln):
         return (bi, h, jnp.minimum(j, jnp.maximum(ln[bi] - 1, 0) // bk), 0)
 
@@ -217,5 +250,5 @@ def dense_attention_kernel(
         out_specs=out_specs,
     )
     return pl.pallas_call(
-        kern, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+        body, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
     )(kv_len, q, k, v)

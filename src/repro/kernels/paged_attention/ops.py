@@ -41,6 +41,8 @@ def paged_attention_decode(
     v_pool: jax.Array,  # [n_blocks, KVH, bs, hd]
     table: jax.Array,   # [B, W] int32
     kv_len: jax.Array,  # [B] int32 valid positions per slot (0 -> zeros out)
+    k_scale: jax.Array = None,  # [KVH] f32: required for int8 pools
+    v_scale: jax.Array = None,  # [KVH] f32
     *,
     softcap: float = 0.0,
     interpret: bool = True,
@@ -48,10 +50,13 @@ def paged_attention_decode(
     b, h, hd = q.shape
     kvh = k_pool.shape[1]
     g = h // kvh
-    qg = q.astype(k_pool.dtype).reshape(b, kvh, g, hd)
+    # int8 pools: queries stay float (the kernel dequantizes K/V per block)
+    qd = jnp.float32 if k_pool.dtype == jnp.int8 else k_pool.dtype
+    qg = q.astype(qd).reshape(b, kvh, g, hd)
     o, _, l = paged_attention_kernel(
         qg, k_pool, v_pool, jnp.asarray(table, jnp.int32),
-        jnp.asarray(kv_len, jnp.int32), scale=hd ** -0.5, causal=False,
+        jnp.asarray(kv_len, jnp.int32), k_scale, v_scale,
+        scale=hd ** -0.5, causal=False,
         q_len=1, softcap=softcap, interpret=interpret,
     )
     return _normalize(o, l).reshape(b, h, hd).astype(q.dtype)
@@ -64,6 +69,8 @@ def paged_attention_prefill(
     v_pool: jax.Array,  # [n_blocks, KVH, bs, hd]
     table: jax.Array,   # [B, W_ctx] int32 (sliced to the context bucket)
     start: jax.Array,   # [B] int32 absolute position of each suffix row 0
+    k_scale: jax.Array = None,  # [KVH] f32: required for int8 pools
+    v_scale: jax.Array = None,  # [KVH] f32
     *,
     softcap: float = 0.0,
     interpret: bool = True,
@@ -76,10 +83,12 @@ def paged_attention_prefill(
     b, h, s, hd = q.shape
     kvh = k_pool.shape[1]
     g = h // kvh
-    qg = q.astype(k_pool.dtype).reshape(b, kvh, g * s, hd)
+    qd = jnp.float32 if k_pool.dtype == jnp.int8 else k_pool.dtype
+    qg = q.astype(qd).reshape(b, kvh, g * s, hd)
     o, _, l = paged_attention_kernel(
         qg, k_pool, v_pool, jnp.asarray(table, jnp.int32),
-        jnp.asarray(start, jnp.int32), scale=hd ** -0.5, causal=True,
+        jnp.asarray(start, jnp.int32), k_scale, v_scale,
+        scale=hd ** -0.5, causal=True,
         q_len=s, softcap=softcap, interpret=interpret,
     )
     return _normalize(o, l).reshape(b, h, s, hd).astype(q.dtype)

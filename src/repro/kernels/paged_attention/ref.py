@@ -10,11 +10,18 @@ import jax
 import jax.numpy as jnp
 
 
-def _gather(pool, table):
-    """pool [n_blocks, KVH, bs, hd], table [B, W] -> [B, KVH, W*bs, hd]."""
+def _gather(pool, table, scale=None):
+    """pool [n_blocks, KVH, bs, hd], table [B, W] -> [B, KVH, W*bs, hd].
+
+    ``scale`` [KVH] dequantizes int8 pools into exactly the dense
+    materialized view the fused kernel never builds.
+    """
     b, w = table.shape
     g = pool[table]  # [B, W, KVH, bs, hd]
-    return jnp.moveaxis(g, 2, 1).reshape(b, pool.shape[1], -1, pool.shape[3])
+    out = jnp.moveaxis(g, 2, 1).reshape(b, pool.shape[1], -1, pool.shape[3])
+    if scale is not None:
+        out = out.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)[None, :, None, None]
+    return out
 
 
 def _softcap(s, softcap):
@@ -32,26 +39,28 @@ def _masked_attn(qg, k, v, mask, scale, softcap):
     return jnp.einsum("bhgsl,bhld->bhgsd", p / denom, v)
 
 
-def paged_decode_ref(q, k_pool, v_pool, table, kv_len, *, softcap=0.0):
+def paged_decode_ref(q, k_pool, v_pool, table, kv_len, *, softcap=0.0,
+                     k_scale=None, v_scale=None):
     """q [B, H, hd] -> [B, H, hd] (fp32): keys at positions >= kv_len[b]
     are invisible; kv_len == 0 yields zeros (matching the kernel)."""
     b, h, hd = q.shape
     kvh = k_pool.shape[1]
-    k = _gather(k_pool, table)
-    v = _gather(v_pool, table)
+    k = _gather(k_pool, table, k_scale)
+    v = _gather(v_pool, table, v_scale)
     mask = jnp.arange(k.shape[2])[None, None] < kv_len[:, None, None]  # [B,1,L]
     qg = q.reshape(b, kvh, h // kvh, 1, hd)
     o = _masked_attn(qg, k, v, mask, hd ** -0.5, softcap)
     return jnp.where(kv_len[:, None, None] > 0, o.reshape(b, h, hd), 0.0)
 
 
-def paged_prefill_ref(q, k_pool, v_pool, table, start, *, softcap=0.0):
+def paged_prefill_ref(q, k_pool, v_pool, table, start, *, softcap=0.0,
+                      k_scale=None, v_scale=None):
     """q [B, H, S, hd] -> [B, H, S, hd] (fp32): causal against absolute
     positions ``start[b] + i`` over the gathered context view."""
     b, h, s, hd = q.shape
     kvh = k_pool.shape[1]
-    k = _gather(k_pool, table)
-    v = _gather(v_pool, table)
+    k = _gather(k_pool, table, k_scale)
+    v = _gather(v_pool, table, v_scale)
     q_pos = start[:, None] + jnp.arange(s)[None]  # [B, S]
     mask = q_pos[:, :, None] >= jnp.arange(k.shape[2])[None, None]  # [B,S,L]
     qg = q.reshape(b, kvh, h // kvh, s, hd)

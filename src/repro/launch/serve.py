@@ -138,7 +138,7 @@ def _run_engine(model, params, prompts, args, sampler):
                       kv_block_size=args.kv_block_size,
                       prefix_cache=not args.no_prefix_cache,
                       prefill_chunk_tokens=args.prefill_chunk_tokens,
-                      attn_impl=args.attn_impl)
+                      attn_impl=args.attn_impl, kv_quant=args.kv_quant)
     # warm run on a throwaway engine: the jitted prefill/chunk programs are
     # memoized per model, so the timed run below measures serving, not XLA
     # compilation
@@ -192,6 +192,25 @@ def _validate_kv_flags(ap: argparse.ArgumentParser, args) -> None:
             f"{', '.join(ModelOptions.ATTN_IMPLS)} (flash routes decode "
             "through the gather-free paged-attention kernel where the "
             "plan keeps qk/pv exact)"
+        )
+    if args.kv_quant not in ModelOptions.KV_QUANTS:
+        ap.error(
+            f"--kv-quant: {args.kv_quant!r} unknown; valid: "
+            f"{', '.join(ModelOptions.KV_QUANTS)} (int8 stores paged KV "
+            "blocks quantized against calibrated per-KV-head scales, "
+            "docs/SERVING.md §KV quantization)"
+        )
+    if args.kv_quant != "none" and args.kv_block_size == 0:
+        ap.error(
+            "--kv-quant int8 requires the paged KV layout; pass "
+            "--kv-block-size > 0 (dense per-slot caches stay in model "
+            "dtype)"
+        )
+    if args.kv_quant != "none" and not args.calibrate:
+        ap.error(
+            "--kv-quant int8 needs calibrated per-KV-head scales; add "
+            "--calibrate so the PTQ pass bakes KV scales into the plan "
+            "(docs/SERVING.md §KV quantization)"
         )
 
 
@@ -251,7 +270,7 @@ def _run_traffic(model, params, trace, args, sampler):
         chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed,
         kv_block_size=block, prefix_cache=not args.no_prefix_cache,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
-        attn_impl=args.attn_impl)
+        attn_impl=args.attn_impl, kv_quant=args.kv_quant)
     fe_cfg = FrontendConfig(
         max_queue_depth=None if args.max_queue < 0 else args.max_queue,
         queue_timeout_s=args.queue_timeout or None,
@@ -333,6 +352,12 @@ def main(argv=None):
                     help="chunked-prefill scheduler token budget per round "
                          "(docs/SERVING.md §Scheduling); 0 = blocking "
                          "full-prompt admission")
+    ap.add_argument("--kv-quant", default="none",
+                    help="paged KV pool storage dtype (docs/SERVING.md "
+                         "§KV quantization): none = model dtype; int8 = "
+                         "quantized blocks against calibrated per-KV-head "
+                         "scales (requires --calibrate and a paged "
+                         "--kv-block-size)")
     ap.add_argument("--attn-impl", default="naive",
                     help="attention implementation (docs/SERVING.md "
                          "§Decode-attention memory model): naive = jnp "
@@ -388,13 +413,32 @@ def main(argv=None):
 
         cal_tokens, _ = pack_prompts(prompts, cfg)
         model = model.calibrate(params, {"tokens": cal_tokens})
-        print(f"calibrated {len(model.plan.act_scales)} site activation scales")
+        print(f"calibrated {len(model.plan.act_scales)} site activation scales"
+              f" + {len(model.plan.kv_scales)} KV storage-site scales")
+    if args.kv_quant != "none":
+        # surface the engine's rejection reason at the flag that caused it
+        # instead of a deep ValueError traceback (the engine re-raises the
+        # same reason if constructed directly)
+        from repro.serve.engine import kv_quant_reject_reason
+
+        reason = kv_quant_reject_reason(model, args.kv_block_size)
+        if reason is not None:
+            ap.error(f"--kv-quant: {reason}")
     if args.traffic_trace:
         trace = _load_trace(ap, args.traffic_trace, cfg)
         return _run_traffic(model, params, trace, args, sampler)
     outs, tps, engine = _run_engine(model, params, prompts, args, sampler)
     print(f"[{plan_label}] {len(outs)} requests (prompt lens {sorted(set(lengths))}), "
           f"{args.gen} new tokens each: {tps:.1f} tok/s")
+    kv = engine.kv_stats
+    if kv:
+        line = (f"  kv pool: {kv['pool_blocks']} blocks x "
+                f"{kv['block_size']} tok, {kv['kv_quant']} storage "
+                f"({kv['bytes_per_block']} B/block, "
+                f"{kv['pool_bytes'] / 1e6:.2f} MB)")
+        if not kv["prefix_cache"]:
+            line += f"; prefix cache off: {kv['prefix_cache_off_reason']}"
+        print(line)
     prefix_stats = engine.prefix_stats
     if prefix_stats:
         print(f"  prefix cache: {prefix_stats['hits']} hits / "

@@ -50,7 +50,8 @@ from repro.configs.base import ArchConfig
 from repro.core.astra_layer import (
     BoundSite, ComputeConfig, EXACT, astra_batched_matmul, runs_exact,
 )
-from repro.core.plan import SiteBinding, as_binding
+from repro.core.plan import SiteBinding, as_binding, observe_kv
+from repro.core.quant import MAG_MAX
 from repro.models.layers import apply_rope, dense, dense_init
 from repro.parallel.sharding import shard_act
 
@@ -65,6 +66,44 @@ class PagedKVCache(NamedTuple):
 
     k: jax.Array  # [n_blocks, n_kv, block_size, hd]
     v: jax.Array  # [n_blocks, n_kv, block_size, hd]
+
+
+class QuantPagedKVCache(NamedTuple):
+    """Int8 block pool + calibrated per-KV-head static scales.
+
+    Same block geometry as :class:`PagedKVCache`, but payloads are stored
+    as symmetric int8 against scales baked by the plan's calibration pass
+    (``L{li}.kv.{k,v}`` sites).  Static scales keep every stored block a
+    pure function of the token path — prefix reuse stays legal — and the
+    paged-attention kernel dequantizes per streamed block, never
+    materializing a dense dequantized view.
+    """
+
+    k: jax.Array  # [n_blocks, n_kv, block_size, hd] int8
+    v: jax.Array  # [n_blocks, n_kv, block_size, hd] int8
+    k_scale: jax.Array  # [n_kv] f32
+    v_scale: jax.Array  # [n_kv] f32
+
+
+AnyPagedKVCache = Union[PagedKVCache, QuantPagedKVCache]
+
+
+def kv_quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 quantization of a KV tensor.
+
+    ``x`` carries KV heads on axis -3 (``[..., n_kv, S, hd]``); ``scale``
+    ends in the per-head axis (``[n_kv]``, or with leading axes aligned to
+    ``x``'s own leading axes, e.g. per-scan-unit scales).
+    """
+    s = jnp.asarray(scale, jnp.float32)[..., None, None]
+    q = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(q, -MAG_MAX, MAG_MAX).astype(jnp.int8)
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`kv_quantize` (up to the <= scale/2 rounding error)."""
+    s = jnp.asarray(scale, jnp.float32)[..., None, None]
+    return q.astype(jnp.float32) * s
 
 
 class BlockTables(NamedTuple):
@@ -208,6 +247,10 @@ def attn_seq(
     if kind != "xattn":
         q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
+        # KV storage-site calibration tap: exactly what decode/prefill
+        # would store in the pool (post-rope k, raw v); no-op outside
+        # plan.calibrate
+        observe_kv(sites, k, v)
     causal = kind != "xattn"
     window = cfg.window if kind == "local" else 0
     qk_b, pv_b = sites("qk"), sites("pv")
@@ -278,39 +321,57 @@ def init_paged_cache(cfg: ArchConfig, n_blocks: int, block_size: int,
     return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
 
-def _paged_view(cache: PagedKVCache, table: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def init_paged_quant_cache(cfg: ArchConfig, n_blocks: int, block_size: int,
+                           k_scale, v_scale) -> QuantPagedKVCache:
+    """Zeroed int8 block pool with calibrated per-KV-head scales baked in."""
+    shape = (n_blocks, cfg.n_kv_heads, block_size, cfg.head_dim)
+    return QuantPagedKVCache(
+        jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+        jnp.asarray(k_scale, jnp.float32), jnp.asarray(v_scale, jnp.float32))
+
+
+def _paged_view(cache: AnyPagedKVCache, table: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Gather each slot's logical KV from the pool.
 
     table [B, W] -> k/v [B, n_kv, W*block_size, hd]: logical position ``p``
     of slot ``b`` lives at ``pool[table[b, p // bs], :, p % bs]``.
+    Quantized pools are dequantized after the gather (this is the naive
+    materializing path; the kernel path never builds this view).
     """
     def gather(pool):
         nb, kvh, bs, hd = pool.shape
         g = pool[table]  # [B, W, kv, bs, hd]
         return jnp.moveaxis(g, 1, 2).reshape(table.shape[0], kvh, -1, hd)
 
-    return gather(cache.k), gather(cache.v)
+    k, v = gather(cache.k), gather(cache.v)
+    if isinstance(cache, QuantPagedKVCache):
+        k = kv_dequantize(k, cache.k_scale)
+        v = kv_dequantize(v, cache.v_scale)
+    return k, v
 
 
-def _paged_write_token(cache: PagedKVCache, table: jax.Array, slot: jax.Array,
-                       k_new: jax.Array, v_new: jax.Array) -> PagedKVCache:
+def _paged_write_token(cache: AnyPagedKVCache, table: jax.Array, slot: jax.Array,
+                       k_new: jax.Array, v_new: jax.Array) -> AnyPagedKVCache:
     """Scatter one token per batch row into its block.  slot [B] is the
     logical cache position (absolute pos, or ring slot for local attn);
     k_new/v_new [B, n_kv, 1, hd].  Rows sharing a physical block (only the
     scratch sink, by engine invariant) race benignly."""
     bs = cache.k.shape[2]
     b = slot.shape[0]
+    if isinstance(cache, QuantPagedKVCache):
+        k_new = kv_quantize(k_new, cache.k_scale)
+        v_new = kv_quantize(v_new, cache.v_scale)
     pb = table[jnp.arange(b), slot // bs]  # [B] physical block per row
     off = slot % bs
     k = cache.k.at[pb, :, off].set(k_new[:, :, 0].astype(cache.k.dtype))
     v = cache.v.at[pb, :, off].set(v_new[:, :, 0].astype(cache.v.dtype))
-    return PagedKVCache(k, v)
+    return cache._replace(k=k, v=v)
 
 
 def attn_decode(
     p,
     x: jax.Array,  # [B, 1, D]
-    cache: Union[KVCache, PagedKVCache],
+    cache: Union[KVCache, AnyPagedKVCache],
     pos: jax.Array,  # [] int32 — absolute position of the new token, or [B]
     cfg: ArchConfig,
     *,
@@ -318,7 +379,7 @@ def attn_decode(
     sites: Union[ComputeConfig, SiteBinding] = EXACT,
     tables: Optional[BlockTables] = None,
     use_kernel: bool = False,
-) -> Tuple[jax.Array, Union[KVCache, PagedKVCache]]:
+) -> Tuple[jax.Array, Union[KVCache, AnyPagedKVCache]]:
     b = x.shape[0]
     sites = as_binding(sites)
     pos = jnp.asarray(pos, jnp.int32)
@@ -338,7 +399,7 @@ def attn_decode(
     v_new = _split_heads(dense(p["wv"], x, sites("kv_proj")), cfg.n_kv_heads, cfg.head_dim)
     q = apply_rope(q, posb, cfg.rope_pct, cfg.rope_theta)
     k_new = apply_rope(k_new, posb, cfg.rope_pct, cfg.rope_theta)
-    if isinstance(cache, PagedKVCache):
+    if isinstance(cache, (PagedKVCache, QuantPagedKVCache)):
         assert tables is not None, "paged decode needs a BlockTables"
         pos_v = pos if per_slot else jnp.broadcast_to(pos, (b,))
         if kind == "local":
@@ -352,9 +413,13 @@ def attn_decode(
         if use_kernel and _dyn_exact(qk_b) and _dyn_exact(pv_b):
             from repro.kernels.paged_attention import paged_attention_decode
 
+            quant = isinstance(cache, QuantPagedKVCache)
             o = paged_attention_decode(q[:, :, 0], cache.k, cache.v,
                                        tables.table, kv_len,
-                                       softcap=cfg.logit_softcap)[:, :, None]
+                                       softcap=cfg.logit_softcap,
+                                       k_scale=cache.k_scale if quant else None,
+                                       v_scale=cache.v_scale if quant else None,
+                                       )[:, :, None]
         else:
             k_log, v_log = _paged_view(cache, tables.table)
             o = _sdpa(q, k_log, v_log, causal=False, window=0, kv_len=kv_len,
@@ -419,7 +484,7 @@ def _paged_write_span(pool: jax.Array, table: jax.Array, start: jax.Array,
 def attn_prefill_paged(
     p,
     x: jax.Array,  # [B, S_suf, D] packed suffixes
-    cache: PagedKVCache,
+    cache: AnyPagedKVCache,
     table: jax.Array,  # [B, W]
     start: jax.Array,  # [B] absolute start of each suffix (any offset)
     cfg: ArchConfig,
@@ -427,7 +492,7 @@ def attn_prefill_paged(
     sites: Union[ComputeConfig, SiteBinding] = EXACT,
     ctx_blocks: int,
     use_kernel: bool = False,
-) -> Tuple[jax.Array, PagedKVCache]:
+) -> Tuple[jax.Array, AnyPagedKVCache]:
     """Suffix prefill with past: global causal attention over the packed
     suffixes against prefix KV already resident in the pool.
 
@@ -450,9 +515,12 @@ def attn_prefill_paged(
     q = shard_act(q, ("batch", "heads", None, None))
     q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
-    cache = PagedKVCache(
-        _paged_write_span(cache.k, table, start, k),
-        _paged_write_span(cache.v, table, start, v),
+    quant = isinstance(cache, QuantPagedKVCache)
+    k_st = kv_quantize(k, cache.k_scale) if quant else k
+    v_st = kv_quantize(v, cache.v_scale) if quant else v
+    cache = cache._replace(
+        k=_paged_write_span(cache.k, table, start, k_st),
+        v=_paged_write_span(cache.v, table, start, v_st),
     )
     ctx_tbl = jax.lax.slice(table, (0, 0), (b, ctx_blocks))
     qk_b, pv_b = sites("qk"), sites("pv")
@@ -460,7 +528,9 @@ def attn_prefill_paged(
         from repro.kernels.paged_attention import paged_attention_prefill
 
         o = paged_attention_prefill(q, cache.k, cache.v, ctx_tbl, start,
-                                    softcap=cfg.logit_softcap)
+                                    softcap=cfg.logit_softcap,
+                                    k_scale=cache.k_scale if quant else None,
+                                    v_scale=cache.v_scale if quant else None)
     else:
         k_log, v_log = _paged_view(cache, ctx_tbl)
         o = _sdpa(q, k_log, v_log, causal=True, window=0, q_offset=start,

@@ -104,8 +104,12 @@ class Model:
 
     def init_decode_state(self, batch: int, max_len: int, paged=None):
         """``paged=(n_blocks, block_size)`` builds the pooled layout for
-        attn/local caches (see ``transformer.init_decode_state``)."""
-        return init_decode_state(self.cfg, batch, max_len, paged)
+        attn/local caches (see ``transformer.init_decode_state``).  With
+        ``opts.kv_quant="int8"`` the pools are int8 blocks carrying the
+        plan's calibrated per-KV-head scales."""
+        return init_decode_state(self.cfg, batch, max_len, paged,
+                                 kv_quant=self.opts.kv_quant,
+                                 plan=self.opts.plan)
 
 
 # ---------------------------------------------------------------- specs

@@ -52,18 +52,29 @@ class ModelOptions:
     # prefill.  Kernels cover exact qk/pv only — quantized dynamic sites
     # fall back to the astra-batched path per site.
     attn_impl: str = "naive"
+    # KV *storage* quantization for the paged pool: "none" keeps blocks in
+    # model dtype; "int8" stores them as symmetric int8 against calibrated
+    # static per-KV-head scales (plan.kv_scales, baked by Model.calibrate).
+    # Paged layouts only — the serve engine refuses dense + kv_quant.
+    kv_quant: str = "none"
     use_rglru_kernel: bool = False
     remat: bool = True
     capacity_factor: float = 1.25
     z_loss: float = 1e-4
 
     ATTN_IMPLS = ("naive", "flash")
+    KV_QUANTS = ("none", "int8")
 
     def __post_init__(self):
         if self.attn_impl not in self.ATTN_IMPLS:
             raise ValueError(
                 f"attn_impl={self.attn_impl!r} unknown; valid: "
                 f"{', '.join(self.ATTN_IMPLS)}"
+            )
+        if self.kv_quant not in self.KV_QUANTS:
+            raise ValueError(
+                f"kv_quant={self.kv_quant!r} unknown; valid: "
+                f"{', '.join(self.KV_QUANTS)}"
             )
         plan = self.plan
         if plan is None:
@@ -161,9 +172,19 @@ def block_apply_decode(p, x, state, pos, cfg: ArchConfig, kind: str,
 
 
 def block_state_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
-                     paged: Optional[Tuple[int, int]] = None):
+                     paged: Optional[Tuple[int, int]] = None,
+                     kv_quant: str = "none",
+                     plan: Optional[ExecutionPlan] = None,
+                     layers: Tuple[int, ...] = ()):
     if kind in ("attn", "local") and paged is not None:
         n_blocks, block_size = paged
+        if kv_quant == "int8":
+            if plan is None:
+                raise ValueError("kv_quant='int8' needs a calibrated plan")
+            k_scale = plan.kv_group_scale(tuple(f"L{li}.kv.k" for li in layers))
+            v_scale = plan.kv_group_scale(tuple(f"L{li}.kv.v" for li in layers))
+            return attn.init_paged_quant_cache(cfg, n_blocks, block_size,
+                                               k_scale, v_scale)
         return attn.init_paged_cache(cfg, n_blocks, block_size)
     if kind in ("attn", "local", "xattn"):
         return attn.init_cache(cfg, kind, batch, max_len)
@@ -381,12 +402,17 @@ def suffix_forward(params, tokens, cfg: ArchConfig, opts: ModelOptions,
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
-                      paged: Optional[Tuple[int, int]] = None):
+                      paged: Optional[Tuple[int, int]] = None,
+                      kv_quant: str = "none",
+                      plan: Optional[ExecutionPlan] = None):
     """Zeroed serving state (the dry-run's decode input spec).
 
     ``paged = (n_blocks, block_size)`` swaps the attn/local caches for
     shared block pools (``PagedKVCache``, no batch axis — the block table
     carries slot identity); recurrent and xattn states stay dense-slotted.
+    ``kv_quant="int8"`` makes the paged pools int8 with per-KV-head scales
+    taken from ``plan.kv_scales`` (layers sharing a scanned trace share one
+    calibration tap, so the group scale is exact for them).
     """
     pattern = cfg.block_pattern
     n_units = cfg.n_pattern_units
@@ -394,10 +420,16 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
     if n_units:
         units = {}
         for si, kind in enumerate(pattern):
-            one = block_state_init(cfg, kind, batch, max_len, paged)
+            one = block_state_init(cfg, kind, batch, max_len, paged,
+                                   kv_quant, plan, _slot_layers(cfg, si))
             units[f"slot{si}"] = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_units, *a.shape)), one)
         states["units"] = units
-    rem_kinds = cfg.layer_kinds[n_units * len(pattern):]
+    rem_base = n_units * len(pattern)
+    rem_kinds = cfg.layer_kinds[rem_base:]
     if rem_kinds:
-        states["rem"] = [block_state_init(cfg, k, batch, max_len, paged) for k in rem_kinds]
+        states["rem"] = [
+            block_state_init(cfg, k, batch, max_len, paged,
+                             kv_quant, plan, (rem_base + i,))
+            for i, k in enumerate(rem_kinds)
+        ]
     return states

@@ -108,6 +108,13 @@ class ServeConfig:
     # None inherits the model's own ModelOptions.attn_impl; a string
     # overrides it for this engine.
     attn_impl: Optional[str] = None
+    # KV pool storage dtype (docs/SERVING.md §KV quantization): "none"
+    # keeps pool blocks in model dtype; "int8" stores them quantized
+    # against the plan's calibrated per-KV-head static scales (requires
+    # the paged layout and a calibrated, KV-deterministic plan — the
+    # engine raises ValueError otherwise instead of silently degrading).
+    # None inherits ModelOptions.kv_quant; a string overrides it.
+    kv_quant: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -186,6 +193,64 @@ def _kv_deterministic(model: Model) -> bool:
     return True
 
 
+def kv_quant_reject_reason(model: Model, kv_block_size: int) -> Optional[str]:
+    """Why ``kv_quant="int8"`` cannot run on this engine (None = legal).
+
+    Shared between ``ServeEngine.__init__`` (which raises ``ValueError``
+    with this reason) and the serving CLI (which surfaces it next to the
+    flag that caused it).  The checks encode the KV-determinism
+    discipline (docs/SERVING.md §KV quantization): pooled int8 blocks are
+    replayed by the prefix cache, so their contents must be a pure
+    function of the token path — static calibrated scales only.
+    """
+    if kv_block_size <= 0:
+        return (
+            "kv_quant='int8' requires the paged KV layout "
+            "(kv_block_size > 0): dense per-slot caches stay in model "
+            "dtype (docs/SERVING.md §KV quantization)"
+        )
+    if not _kv_deterministic(model):
+        return (
+            "kv_quant='int8' requires deterministic KV: every quantized "
+            "GEMM site must carry a static calibrated act_scale — "
+            "dynamic per-tensor scales would make pooled int8 blocks "
+            "depend on admission history; run Model.calibrate or use an "
+            "exact/static plan (docs/SERVING.md §KV quantization)"
+        )
+    from repro.core.plan import kv_sites
+
+    missing = [s for s in kv_sites(model.cfg) if model.plan.kv_scale(s) is None]
+    if missing:
+        return (
+            f"kv_quant='int8' needs calibrated KV scales but the plan "
+            f"carries none for {missing[0]!r}"
+            + (f" (+{len(missing) - 1} more site(s))" if len(missing) > 1 else "")
+            + "; run Model.calibrate before enabling kv_quant"
+        )
+    return None
+
+
+def _pool_bytes_per_block(states) -> int:
+    """Storage bytes one physical block occupies summed across every
+    layer's K+V pools (at the pools' actual dtype — int8 under
+    ``kv_quant``).  Per-pool scale vectors are constants, not per-block
+    storage, and are excluded."""
+    from repro.models.attention import PagedKVCache, QuantPagedKVCache
+
+    total = 0
+    for node in jax.tree.leaves(
+        states, is_leaf=lambda x: isinstance(x, (PagedKVCache, QuantPagedKVCache))
+    ):
+        if not isinstance(node, (PagedKVCache, QuantPagedKVCache)):
+            continue
+        for arr in (node.k, node.v):
+            # units pools are [U, n_blocks, kv, bs, hd], remainder pools
+            # [n_blocks, kv, bs, hd]
+            n_blocks = arr.shape[1] if arr.ndim == 5 else arr.shape[0]
+            total += arr.size * arr.dtype.itemsize // n_blocks
+    return total
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, config: ServeConfig = ServeConfig(),
                  chip: Optional[AstraChipConfig] = None, plan=None,
@@ -219,6 +284,20 @@ class ServeEngine:
                 model, opts=dataclasses.replace(model.opts,
                                                 attn_impl=config.attn_impl)
             )
+        if (config.kv_quant is not None
+                and config.kv_quant != model.opts.kv_quant):
+            # same ownership rule as attn_impl: the engine picks the KV
+            # storage dtype.  ModelOptions.__post_init__ validates the value.
+            model = dataclasses.replace(
+                model, opts=dataclasses.replace(model.opts,
+                                                kv_quant=config.kv_quant)
+            )
+        if model.opts.kv_quant != "none":
+            reason = kv_quant_reject_reason(model, config.kv_block_size)
+            if reason is not None:
+                # refuse loudly — a silently-disabled quantized pool would
+                # report fp16-sized capacity while claiming int8 savings
+                raise ValueError(reason)
         cfg = model.cfg
         # every GEMM site this model executes must resolve 1:1 to a
         # simulator op — the accounting below attributes energy by site
@@ -266,11 +345,29 @@ class ServeEngine:
             self._tables_dirty = False
             self._ring_len = (min(config.max_len, cfg.window)
                               if any(k == "local" for k in cfg.layer_kinds) else 0)
-            if config.prefix_cache and self._suffix_path and _kv_deterministic(model):
+            # record *why* reuse is off instead of silently dropping it —
+            # kv_stats and the CLI surface this next to the pool counters
+            self._prefix_off_reason: Optional[str] = None
+            if not config.prefix_cache:
+                self._prefix_off_reason = "disabled by config (prefix_cache=False)"
+            elif not self._suffix_path:
+                self._prefix_off_reason = (
+                    "stateful stack: recurrent/windowed layers cannot resume "
+                    "from pooled blocks"
+                )
+            elif not _kv_deterministic(model):
+                self._prefix_off_reason = (
+                    "non-deterministic KV: a quantized GEMM site runs with "
+                    "dynamic scales (run Model.calibrate for static scales)"
+                )
+            else:
                 self._prefix = RadixPrefixTree(bs)
             self._states = model.init_decode_state(
                 config.max_slots, config.max_len, paged=(n_blocks, bs)
             )
+            # byte accounting: one block's footprint summed across every
+            # layer's K+V pools, at the pool's actual storage dtype
+            self._pool.bytes_per_block = _pool_bytes_per_block(self._states)
         else:
             self._states = model.init_decode_state(config.max_slots, config.max_len)
         # --------------------------------------------- prefill scheduling
@@ -838,6 +935,32 @@ class ServeEngine:
             "evictions": t.evictions, "interned_blocks": len(t),
             "free_blocks": self._pool.n_free,
         }
+
+    @property
+    def kv_stats(self) -> Dict[str, object]:
+        """KV-memory layout counters (docs/SERVING.md §KV quantization);
+        ``{}`` on the dense layout.  ``bytes_per_block`` is the storage
+        footprint of one physical block summed over every layer's K+V
+        pools at their actual dtype — int8 pools report ~half the fp16
+        figure, which is exactly the capacity claim BENCH_kv_quant
+        checks.  ``prefix_cache_off_reason`` explains a disabled prefix
+        cache instead of letting reuse vanish silently."""
+        if not self._paged:
+            return {}
+        out: Dict[str, object] = {
+            "kv_quant": self.model.opts.kv_quant,
+            "block_size": self._block_size,
+            "pool_blocks": self._pool.n_blocks,
+            "live_blocks": self._pool.n_live,
+            "free_blocks": self._pool.n_free,
+            "bytes_per_block": self._pool.bytes_per_block,
+            "pool_bytes": self._pool.total_bytes,
+            "live_bytes": self._pool.live_bytes,
+            "prefix_cache": self._prefix is not None,
+        }
+        if self._prefix is None and self._prefix_off_reason:
+            out["prefix_cache_off_reason"] = self._prefix_off_reason
+        return out
 
     @property
     def scheduler_stats(self) -> Dict[str, int]:

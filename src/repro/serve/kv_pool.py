@@ -38,6 +38,12 @@ class KVBlockPool:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.n_blocks = n_blocks
         self.block_size = block_size
+        # storage bytes per physical block summed across every layer's K+V
+        # pool tensors, at their actual dtype (int8 under kv_quant).  The
+        # engine stamps this after building the device pools; it is the
+        # unit of all serve-side KV byte accounting (docs/SERVING.md §KV
+        # quantization).
+        self.bytes_per_block = 0
         # block 0 reserved as the scratch sink; pop() hands out low ids first
         self._free: List[int] = list(range(n_blocks - 1, 0, -1))
         self._ref = [0] * n_blocks
@@ -54,6 +60,16 @@ class KVBlockPool:
 
     def ref(self, block: int) -> int:
         return self._ref[block]
+
+    @property
+    def total_bytes(self) -> int:
+        """Allocatable pool storage (scratch block 0 excluded)."""
+        return (self.n_blocks - 1) * self.bytes_per_block
+
+    @property
+    def live_bytes(self) -> int:
+        """Storage held by live blocks (refcount > 0)."""
+        return self.n_live * self.bytes_per_block
 
     # ------------------------------------------------------------ lifetime
     def alloc(self, n: int) -> List[int]:

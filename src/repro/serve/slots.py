@@ -80,8 +80,26 @@ def _block_scatter(pool: jax.Array, dense: jax.Array, rows: jax.Array, axis: int
 
 
 def _scatter_node(big, small, slot_ids: jax.Array, rows: jax.Array, axis: int):
-    from repro.models.attention import KVCache, PagedKVCache
+    from repro.models.attention import (
+        KVCache, PagedKVCache, QuantPagedKVCache, kv_quantize,
+    )
 
+    if isinstance(big, QuantPagedKVCache):
+        # the QuantPagedKVCache check must precede the generic NamedTuple
+        # branch: its 4 fields would zip-truncate against the 2-field dense
+        # KVCache.  Dense prefill KV is quantized against the pool's baked
+        # static scales before the scatter (the .astype inside
+        # _block_scatter is then a no-op on the int8 payload).
+        assert isinstance(small, KVCache)
+        nb = min(rows.shape[1], -(-small.k.shape[axis + 2] // big.k.shape[axis + 2]))
+        r = rows[:, :nb]
+        # scanned units carry per-unit scale rows [U, kv] vs dense
+        # [U, n, kv, L, hd]: insert the request axis so broadcasting aligns
+        ks = big.k_scale[:, None] if axis == 1 else big.k_scale
+        vs = big.v_scale[:, None] if axis == 1 else big.v_scale
+        return big._replace(
+            k=_block_scatter(big.k, kv_quantize(small.k, ks), r, axis),
+            v=_block_scatter(big.v, kv_quantize(small.v, vs), r, axis))
     if isinstance(big, PagedKVCache):
         assert isinstance(small, KVCache)
         nb = min(rows.shape[1], -(-small.k.shape[axis + 2] // big.k.shape[axis + 2]))

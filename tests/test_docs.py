@@ -15,7 +15,7 @@ import re
 import pytest
 
 from repro.configs import ARCHS
-from repro.core.plan import ExecutionPlan, _match, model_sites
+from repro.core.plan import ExecutionPlan, _match, kv_sites, model_sites
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -54,10 +54,14 @@ def _fenced_blocks(text, lang):
 
 @pytest.fixture(scope="module")
 def zoo_sites():
-    """Union of every executed GEMM site across the full (non-reduced) zoo."""
+    """Union of every executed GEMM site across the full (non-reduced) zoo,
+    plus the KV storage sites (``L{li}.kv.{k,v}`` — not GEMMs, but the
+    docs quote them by the same grammar; docs/PLANS.md §KV storage
+    sites)."""
     sites = set()
     for cfg in ARCHS.values():
         sites.update(model_sites(cfg))
+        sites.update(kv_sites(cfg))
     return sites
 
 
@@ -104,6 +108,51 @@ def test_quoted_site_ids_exist(zoo_sites):
                 )
                 checked += 1
     assert checked >= 3, "expected concrete site ids quoted in the docs"
+
+
+# -------------------------------------------------------- benchmark schema
+_SUMMARY_SECTION_KEYS = {"name", "headline_metric", "headline_value",
+                         "claim_pass", "unix_time", "failed"}
+
+
+def _bench_files():
+    out = {}
+    for fname in sorted(os.listdir(ROOT)):
+        m = re.match(r"BENCH_([a-z0-9_]+)\.json$", fname)
+        if m and m.group(1) != "summary":
+            out[m.group(1)] = os.path.join(ROOT, fname)
+    return out
+
+
+def test_bench_summary_schema():
+    """BENCH_summary.json is the cross-PR perf index: stable schema_version
+    plus one entry per section with the full key set, covering every
+    per-section BENCH_*.json committed at the repo root."""
+    path = os.path.join(ROOT, "BENCH_summary.json")
+    assert os.path.exists(path), "BENCH_summary.json missing at repo root"
+    data = json.loads(_read(path))
+    assert data.get("schema_version") == 1, "summary schema_version must be 1"
+    sections = data.get("sections")
+    assert isinstance(sections, dict) and sections, "summary has no sections"
+    for name, entry in sections.items():
+        missing = _SUMMARY_SECTION_KEYS - entry.keys()
+        assert not missing, f"section {name!r} missing keys {sorted(missing)}"
+        assert entry["name"] == name
+        if entry["headline_value"] is not None:
+            assert isinstance(entry["headline_value"], (int, float))
+        if entry["claim_pass"] is not None:
+            assert isinstance(entry["claim_pass"], bool)
+    for name, bench_path in _bench_files().items():
+        result = json.loads(_read(bench_path))  # must be valid JSON
+        assert name in sections, (
+            f"BENCH_{name}.json exists at the repo root but the summary "
+            "index has no section for it — run `python -m benchmarks.run "
+            f"--only {name}` so the trajectory stays complete"
+        )
+        if isinstance(result, dict) and "claim_pass" in result:
+            assert isinstance(result["claim_pass"], bool), (
+                f"BENCH_{name}.json claim_pass must be a bool"
+            )
 
 
 # ------------------------------------------------------------------- links

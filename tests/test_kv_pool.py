@@ -202,3 +202,23 @@ def test_random_admit_finish_never_leaks_or_double_frees(ops):
     tree.evict(pool.n_blocks, pool)
     assert pool.n_free == pool.n_blocks - 1, "leaked blocks"
     assert len(tree) == 0
+
+
+# ------------------------------------------------------- byte accounting
+def test_bytes_accounting_tracks_refcounts():
+    """``bytes_per_block`` (stamped by the engine from the device pools —
+    int8 under kv_quant) drives all serve-side KV byte accounting; the
+    derived totals must follow the refcounts exactly."""
+    pool = KVBlockPool(10, 4)
+    assert pool.total_bytes == 0 and pool.live_bytes == 0  # unstamped
+    pool.bytes_per_block = 256
+    assert pool.total_bytes == 9 * 256  # block 0 is the scratch sink
+    ids = pool.alloc(3)
+    assert pool.live_bytes == 3 * 256
+    pool.incref(ids[0])
+    assert pool.live_bytes == 3 * 256  # extra refs don't double-count
+    pool.decref(ids[0])
+    pool.decref(ids[0])
+    pool.decref(ids[1])
+    assert pool.live_bytes == 1 * 256
+    assert pool.total_bytes == 9 * 256  # capacity is refcount-independent

@@ -221,3 +221,54 @@ def test_suffix_forward_rejects_stateful_stacks(key):
         suffix_forward(params, jnp.zeros((1, 4), jnp.int32), model.cfg,
                        model.opts, states, jnp.zeros((1, 4), jnp.int32),
                        jnp.zeros((1,), jnp.int32), 4)
+
+
+# ----------------------------------------------------- quantized int8 pool
+def _quant_payloads(eng, ids):
+    """int8 K/V payloads at physical block ids, across every pool leaf."""
+    from repro.models.attention import PagedKVCache, QuantPagedKVCache
+    leaves = [l for l in jax.tree.leaves(
+        eng._states,
+        is_leaf=lambda x: isinstance(x, (PagedKVCache, QuantPagedKVCache)))
+        if isinstance(l, QuantPagedKVCache)]
+    assert leaves, "engine holds no quantized pools"
+    ids = jnp.asarray(ids, jnp.int32)
+    out = []
+    for c in leaves:
+        ax = 1 if c.k.ndim == 5 else 0  # scan-unit pools carry [U, ...]
+        out.append(np.asarray(jnp.take(c.k, ids, axis=ax)))
+        out.append(np.asarray(jnp.take(c.v, ids, axis=ax)))
+    return out
+
+
+def test_quantized_hit_blocks_byte_identical_any_admission_order(stablelm):
+    """Prefix hits on the int8 pool return byte-identical cached block
+    payloads regardless of admission order, and divergence (COW) never
+    rewrites the shared quantized prefix: with static calibrated scales,
+    pooled KV is a pure function of the token path."""
+    model, params = stablelm
+    [cal] = _prompts(model.cfg, (12,), seed=31)
+    qmodel = model.with_plan("int8").calibrate(params, {"tokens": cal[None]})
+    rng = np.random.default_rng(32)
+    shared = rng.integers(0, model.cfg.vocab, 8, dtype=np.int32)
+    a, b = (np.concatenate(
+        [shared, rng.integers(0, model.cfg.vocab, 4, dtype=np.int32)])
+        for _ in range(2))
+
+    def run(order):
+        eng = ServeEngine(qmodel, params, ServeConfig(
+            max_slots=1, max_len=24, kv_block_size=4, kv_quant="int8",
+            astra_accounting=False))
+        outs = [eng.generate_batch([p], 4)[0].tokens for p in order]
+        return eng, outs
+
+    e1, (a1, b1) = run([a, b])
+    e2, (b2, a2) = run([b, a])
+    assert e1.prefix_stats["hits"] > 0 and e2.prefix_stats["hits"] > 0
+    np.testing.assert_array_equal(a1, a2)  # admission-order independent
+    np.testing.assert_array_equal(b1, b2)
+    for p in (a, b):
+        ids1, ids2 = e1._prefix.match(p, 6), e2._prefix.match(p, 6)
+        assert len(ids1) == len(ids2) > 0
+        for x, y in zip(_quant_payloads(e1, ids1), _quant_payloads(e2, ids2)):
+            np.testing.assert_array_equal(x, y)

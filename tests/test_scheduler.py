@@ -366,3 +366,43 @@ def test_timing_measured_from_submission(key):
     assert t1.queue_time_s > 0.0
     for o in outs:
         assert o.wall_time_s == o.timing.wall_time_s
+
+
+def test_forced_evict_shortfall_quant_pool_rolls_back(key):
+    """Admission rollback on the *quantized* pool: a forced evict
+    shortfall must leave the int8 pool's refcounts (and the derived byte
+    accounting) exactly where they were, then recover token-identically
+    once eviction works again."""
+    cfg = dataclasses.replace(get_arch("stablelm-1.6b").reduced(),
+                              dtype="float32")
+    model = Model(cfg, ModelOptions(plan="int8"))
+    params = model.init(key)
+    [cal] = _prompts(cfg, (8,), seed=9)
+    model = model.calibrate(params, {"tokens": cal[None]})
+    eng = ServeEngine(model, params, ServeConfig(
+        max_slots=2, max_len=16, chunk_steps=2, kv_block_size=4,
+        kv_pool_blocks=9, kv_quant="int8", astra_accounting=False))
+    for s in range(3):  # intern 6 of 8 usable blocks: zero headroom
+        eng.generate_batch(_prompts(cfg, (8,), seed=10 + s), 4)
+    assert eng.prefix_stats["interned_blocks"] == 6
+    busy_id = eng.submit(_prompts(cfg, (4,), seed=20)[0], 10)
+    outs = eng.step()
+    n_live0 = eng._pool.n_live
+    bytes0 = eng.kv_stats["live_bytes"]
+    real_evict = eng._prefix.evict
+    eng._prefix.evict = lambda n, pool: 0  # forced shortfall
+    blocked = _prompts(cfg, (8,), seed=21)[0]
+    blocked_id = eng.submit(blocked, 4)
+    outs += eng.step()  # admission fails cleanly; decode continues
+    assert eng._pool.n_live == n_live0  # no leaked increfs
+    assert eng.kv_stats["live_bytes"] == bytes0  # accounting in sync
+    assert [r.id for r in eng._queue] == [blocked_id]
+    eng._prefix.evict = real_evict
+    outs += eng.run()
+    by_id = {o.request_id: o for o in outs}
+    assert busy_id in by_id and blocked_id in by_id
+    ref = ServeEngine(model, params, ServeConfig(
+        max_slots=1, max_len=16, kv_block_size=4, kv_quant="int8",
+        astra_accounting=False))
+    [want] = ref.generate_batch([blocked], 4)
+    np.testing.assert_array_equal(by_id[blocked_id].tokens, want.tokens)
