@@ -117,6 +117,11 @@ def main():
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     only = [s for s in args.only.split(",") if s]
+    # reject typo'd section names loudly — a silently-empty run used to
+    # look identical to an all-sections-skipped one
+    from repro.launch.flags import check_choices
+
+    check_choices(ap, "--only", only, list(SECTIONS))
     failures = []
     ran = {}
     for name, fn in SECTIONS.items():

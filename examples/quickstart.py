@@ -10,7 +10,6 @@ latency/energy for the workload.
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch

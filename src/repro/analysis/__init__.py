@@ -1,0 +1,36 @@
+"""Repo-specific static analysis for the JAX/Pallas serving stack.
+
+The serving stack rests on invariants that unit tests only probe at a few
+points: traced paths must not read wall clocks or ambient RNG (replay
+determinism), Pallas kernel bodies must not hide ``program_id``-dependent
+lookups inside ``pl.when`` (no lowering rule under nested conds), kernel
+subpackages must keep the kernel/ops/ref contract, site-name literals must
+follow the ``L{li}.{kind}.{op}`` grammar of ``core/plan.py``, every serve
+config field must stay reachable from the CLI, and determinism-gated
+features must actually call their gates.  ``repro.analysis`` checks all of
+that at review time with stdlib ``ast`` — no third-party dependencies —
+and runs in CI before the test matrix (docs/ANALYSIS.md).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis src/ --strict
+
+Suppressions (docs/ANALYSIS.md §Suppressions)::
+
+    x = time.time()  # repro-lint: disable=trace-purity -- why it is OK
+    # repro-lint: disable=site-grammar -- file-level, from its own line
+
+``--strict`` additionally rejects suppressions without a ``-- reason``
+and suppressions naming unknown checks.
+"""
+from repro.analysis.core import (  # noqa: F401  (public API re-exports)
+    CHECKERS, Finding, RepoContext, SourceFile, checker, run_analysis,
+)
+
+# importing the package registers every built-in checker
+from repro.analysis import checks  # noqa: F401,E402
+
+__all__ = [
+    "CHECKERS", "Finding", "RepoContext", "SourceFile", "checker",
+    "run_analysis",
+]

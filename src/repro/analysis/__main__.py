@@ -1,0 +1,84 @@
+"""CLI: ``python -m repro.analysis [paths...] [--strict] [--json] ...``
+
+Exit codes: 0 — clean; 1 — findings; 2 — usage/internal error.  CI runs
+``python -m repro.analysis src/ --strict --json-out artifacts/lint.json``
+(see .github/workflows/ci.yml §lint).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from repro.analysis import CHECKERS, run_analysis
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-specific AST invariant linter (docs/ANALYSIS.md).",
+    )
+    ap.add_argument("paths", nargs="*", default=["src/"],
+                    help="files or directories to lint (default: src/)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also police suppressions: justifications required, "
+                         "unknown check names are findings")
+    ap.add_argument("--disable", action="append", default=[], metavar="CHECK",
+                    help="skip a checker (repeatable, or comma-separated)")
+    ap.add_argument("--json", action="store_true",
+                    help="print findings + stats as JSON instead of text")
+    ap.add_argument("--json-out", metavar="PATH",
+                    help="also write the JSON report to PATH")
+    ap.add_argument("--root", help="repo root (default: walk up from the "
+                                   "first path to pyproject.toml)")
+    ap.add_argument("--list-checks", action="store_true",
+                    help="list registered checkers and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_checks:
+        width = max(len(n) for n in CHECKERS)
+        for name in sorted(CHECKERS):
+            c = CHECKERS[name]
+            kind = "repo " if c.repo_level else "file "
+            print(f"{name:<{width}}  [{kind}]  {c.doc}")
+        return 0
+
+    disable = [d for spec in args.disable for d in spec.split(",") if d]
+    unknown = sorted(set(disable) - set(CHECKERS))
+    if unknown:
+        print(f"error: --disable names unknown checker(s): {unknown}; "
+              f"known: {sorted(CHECKERS)}", file=sys.stderr)
+        return 2
+    paths = args.paths or ["src/"]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"error: no such path(s): {missing}", file=sys.stderr)
+        return 2
+
+    findings, stats = run_analysis(paths, root=args.root, disable=disable,
+                                   strict=args.strict)
+    report = {"findings": [f.as_dict() for f in findings], "stats": stats}
+    if args.json_out:
+        out_dir = os.path.dirname(os.path.abspath(args.json_out))
+        os.makedirs(out_dir, exist_ok=True)
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+    if args.json:
+        json.dump(report, sys.stdout, indent=2)
+        print()
+    else:
+        for f in findings:
+            print(f.render())
+        counts = ", ".join(f"{k}={v}" for k, v in sorted(stats["counts"].items()))
+        mode = " [strict]" if args.strict else ""
+        print(f"repro-lint{mode}: {len(findings)} finding(s) in "
+              f"{stats['n_files']} file(s), {len(stats['checkers'])} "
+              f"checker(s) active" + (f" ({counts})" if counts else ""))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

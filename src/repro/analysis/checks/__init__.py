@@ -1,0 +1,11 @@
+"""Built-in checkers.  Importing this package registers all of them; a new
+checker is one module with a ``@checker(...)``-decorated function plus an
+import line here (docs/ANALYSIS.md §Adding a checker)."""
+from repro.analysis.checks import (  # noqa: F401  (imported for registration)
+    config_surface,
+    determinism_gates,
+    kernel_contract,
+    pallas_hazards,
+    site_grammar,
+    trace_purity,
+)

@@ -1,0 +1,154 @@
+"""config-surface: every serve config field stays reachable and documented.
+
+``ServeConfig`` / ``FrontendConfig`` / ``ModelOptions`` are the serving
+stack's whole tuning surface.  Fields rot in two directions: a field is
+added but never exposed as a CLI flag (unreachable from
+``launch/serve.py`` — ``kv_pool_blocks`` and ``max_concurrency`` had
+exactly this drift before this checker), or a flag/field pair survives in
+one place after the other was renamed.  The single source of truth is the
+declarative registry in ``src/repro/launch/flags.py``:
+
+* ``FIELD_FLAGS``    — ``"Cls.field" -> "--flag"`` for every field the
+  CLI reaches;
+* ``INTERNAL_FIELDS`` — ``"Cls.field" -> reason`` for fields deliberately
+  not CLI-reachable.
+
+The checker cross-references the dataclass definitions (by AST — nothing
+is imported), the registry, the ``add_argument`` calls in ``flags.py``,
+and the serving docs: every field must appear in exactly one registry,
+every registry entry must name a real field, every mapped flag must be
+registered, and every CLI-reachable field must be mentioned in
+``docs/SERVING.md`` or ``docs/PLANS.md``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, RepoContext, checker
+
+FLAGS_REL = "src/repro/launch/flags.py"
+DOCS_REL = ("docs/SERVING.md", "docs/PLANS.md")
+# the config dataclasses under contract: class name -> defining module
+CONFIG_CLASSES: Dict[str, str] = {
+    "ServeConfig": "src/repro/serve/engine.py",
+    "FrontendConfig": "src/repro/serve/frontend.py",
+    "ModelOptions": "src/repro/models/transformer.py",
+}
+
+
+def _class_fields(tree: ast.AST, cls: str) -> List[Tuple[str, int]]:
+    """(field, lineno) for each annotated dataclass field of ``cls``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            return [
+                (stmt.target.id, stmt.lineno)
+                for stmt in node.body
+                if isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)
+            ]
+    return []
+
+
+def _str_dict(tree: ast.AST, name: str) -> Optional[Dict[str, str]]:
+    """A module-level ``NAME = {"str": "str", ...}`` literal, or None."""
+    for node in tree.body if hasattr(tree, "body") else []:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == name \
+                and isinstance(node.value, ast.Dict):
+            out = {}
+            for k, v in zip(node.value.keys, node.value.values):
+                if isinstance(k, ast.Constant) and isinstance(v, ast.Constant):
+                    out[str(k.value)] = str(v.value)
+            return out
+    return None
+
+
+def _registered_flags(tree: ast.AST) -> Set[str]:
+    flags: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "add_argument":
+            for arg in node.args:
+                if isinstance(arg, ast.Constant) and isinstance(arg.value, str) \
+                        and arg.value.startswith("--"):
+                    flags.add(arg.value)
+    return flags
+
+
+@checker("config-surface", scope=tuple(CONFIG_CLASSES.values()) + (FLAGS_REL,),
+         repo_level=True)
+def check(ctx: RepoContext) -> Iterator[Finding]:
+    """Cross-check config dataclasses against the flag registry and docs."""
+    flags_tree = ctx.parse(FLAGS_REL)
+    if flags_tree is None:
+        yield Finding(
+            "config-surface", FLAGS_REL, 1,
+            f"{FLAGS_REL} is missing or unparseable; it must declare "
+            "FIELD_FLAGS / INTERNAL_FIELDS — the registry this checker "
+            "(and the serving CLI) treat as the single source of truth")
+        return
+    field_flags = _str_dict(flags_tree, "FIELD_FLAGS")
+    internal = _str_dict(flags_tree, "INTERNAL_FIELDS")
+    for name, table in (("FIELD_FLAGS", field_flags),
+                        ("INTERNAL_FIELDS", internal)):
+        if table is None:
+            yield Finding(
+                "config-surface", FLAGS_REL, 1,
+                f"{FLAGS_REL} does not declare a literal {name} dict")
+    if field_flags is None or internal is None:
+        return
+    registered = _registered_flags(flags_tree)
+    docs = "\n".join(ctx.read(rel) or "" for rel in DOCS_REL)
+
+    real_fields: Set[str] = set()
+    for cls, rel in CONFIG_CLASSES.items():
+        tree = ctx.parse(rel)
+        if tree is None:
+            yield Finding("config-surface", rel, 1,
+                          f"cannot parse {rel} to find {cls}")
+            continue
+        fields = _class_fields(tree, cls)
+        if not fields:
+            yield Finding("config-surface", rel, 1,
+                          f"{cls} not found (or has no annotated fields) "
+                          f"in {rel}")
+            continue
+        for field, lineno in fields:
+            key = f"{cls}.{field}"
+            real_fields.add(key)
+            in_flags, in_internal = key in field_flags, key in internal
+            if in_flags and in_internal:
+                yield Finding(
+                    "config-surface", FLAGS_REL, 1,
+                    f"{key} appears in both FIELD_FLAGS and INTERNAL_FIELDS; "
+                    "a field is CLI-reachable or internal, not both")
+            elif not in_flags and not in_internal:
+                yield Finding(
+                    "config-surface", rel, lineno,
+                    f"{key} is neither reachable from a serve CLI flag "
+                    "(FIELD_FLAGS) nor marked internal (INTERNAL_FIELDS) in "
+                    f"{FLAGS_REL}; new config knobs must be wired through "
+                    "launch/serve.py or explicitly opted out")
+            if in_flags:
+                flag = field_flags[key]
+                if flag not in registered:
+                    yield Finding(
+                        "config-surface", FLAGS_REL, 1,
+                        f"FIELD_FLAGS maps {key} to {flag!r} but no "
+                        f"add_argument({flag!r}, ...) exists in {FLAGS_REL}")
+                if field not in docs and flag not in docs:
+                    yield Finding(
+                        "config-surface", rel, lineno,
+                        f"CLI-reachable field {key} (flag {flag}) is "
+                        f"mentioned in neither of {DOCS_REL}; document the "
+                        "knob where operators will look for it")
+    for key in list(field_flags) + list(internal):
+        if key not in real_fields:
+            cls = key.split(".", 1)[0]
+            if cls in CONFIG_CLASSES:
+                yield Finding(
+                    "config-surface", FLAGS_REL, 1,
+                    f"registry entry {key} names a field that no longer "
+                    "exists on its dataclass; delete or rename the entry")

@@ -1,0 +1,79 @@
+"""determinism-gates: replayed-KV features stay behind their gate helpers.
+
+Two serving features replay pooled KV bytes computed under an earlier
+batch packing: prefix reuse (``RadixPrefixTree``) and int8 KV
+quantization (``init_paged_quant_cache``).  Both are only sound when
+interned KV is a pure function of the token path, and the repo has
+exactly two helpers that encode that discipline —
+``_kv_deterministic(model)`` and ``kv_quant_reject_reason(model,
+kv_block_size)`` in ``serve/engine.py`` (DESIGN.md §Numerics and
+parity).  A new call site that constructs the prefix tree or a quantized
+pool without consulting a gate silently reintroduces
+admission-history-dependent outputs.
+
+The rule: any module in scope that *calls* a gated constructor must also
+reference one of the gate helpers.  Modules that merely define the
+constructor (``prefix_tree.py``, ``models/attention.py``) are exempt —
+defining the mechanism is not enabling it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from repro.analysis.core import Finding, RepoContext, SourceFile, checker
+
+SCOPE = ("src/repro/serve/*", "src/repro/models/*", "src/repro/launch/*")
+# constructor name -> the feature it enables
+GATED = {
+    "RadixPrefixTree": "prefix reuse",
+    "init_paged_quant_cache": "int8 KV quantization",
+}
+GATES = ("_kv_deterministic", "kv_quant_reject_reason")
+
+
+def _dotted_leaf(node: ast.AST) -> str:
+    while isinstance(node, ast.Attribute):
+        return node.attr
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _defined_names(tree: ast.AST) -> Set[str]:
+    return {n.name for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.ClassDef))}
+
+
+def _referenced_names(tree: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            names.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            names.add(node.attr)
+        elif isinstance(node, ast.ImportFrom):
+            names.update(a.name for a in node.names)
+    return names
+
+
+@checker("determinism-gates", scope=SCOPE)
+def check(sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+    """Flag gated-constructor calls in modules that consult no gate."""
+    defined = _defined_names(sf.tree)
+    referenced = _referenced_names(sf.tree)
+    has_gate = any(g in referenced for g in GATES)
+    calls: List[ast.Call] = [
+        n for n in ast.walk(sf.tree)
+        if isinstance(n, ast.Call) and _dotted_leaf(n.func) in GATED
+    ]
+    for call in calls:
+        name = _dotted_leaf(call.func)
+        if name in defined:
+            continue  # the defining module exercising its own mechanism
+        if not has_gate:
+            yield Finding(
+                "determinism-gates", sf.rel, call.lineno,
+                f"{name}(...) enables {GATED[name]} but this module never "
+                f"consults a determinism gate ({' / '.join(GATES)} in "
+                "serve/engine.py); replayed pooled KV must be proven a pure "
+                "function of the token path before the feature turns on "
+                "(DESIGN.md §Numerics and parity)")

@@ -1,0 +1,136 @@
+"""kernel-contract: every kernels/* subpackage keeps the kernel/ops/ref trio.
+
+The six kernel subpackages share one shape (DESIGN.md §Kernels):
+``kernel.py`` holds the Pallas body, ``ops.py`` the public jit wrappers,
+``ref.py`` the jnp oracle the tests compare against, and ``__init__.py``
+re-exports the ops surface.  The contract is what makes "validated on CPU
+with interpret=True against ref.py" a property of the *tree*, not of
+whichever kernels someone remembered to test:
+
+* all four files exist;
+* ``ops.py`` exposes >= 1 public function, ``ref.py`` >= 1 public
+  ``*_ref`` function;
+* ``__init__.py`` re-exports only names ``ops.py`` actually defines;
+* for same-stem pairs (``foo`` in ops, ``foo_ref`` in ref) the oracle's
+  required parameters are a subset of the op's (the op may add tuning
+  kwargs like ``bm``/``interpret``, never drop semantic ones);
+* some module under ``tests/`` imports the subpackage AND one of its
+  ``*_ref`` oracles — a reference-parity test exists.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterator, List, Set, Tuple
+
+from repro.analysis.core import Finding, RepoContext, checker
+
+KERNELS_REL = "src/repro/kernels"
+TRIO = ("kernel.py", "ops.py", "ref.py", "__init__.py")
+
+
+def _public_defs(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef) and not n.name.startswith("_")}
+
+
+def _params(fn: ast.FunctionDef) -> Tuple[Set[str], Set[str]]:
+    """(all parameter names, required parameter names)."""
+    a = fn.args
+    pos = [p.arg for p in a.posonlyargs + a.args]
+    kw = [p.arg for p in a.kwonlyargs]
+    names = set(pos) | set(kw)
+    n_required_pos = len(pos) - len(a.defaults)
+    required = set(pos[:n_required_pos])
+    required |= {p.arg for p, d in zip(a.kwonlyargs, a.kw_defaults) if d is None}
+    return names, required
+
+
+def _subpackages(ctx: RepoContext) -> List[str]:
+    base = os.path.join(ctx.root, KERNELS_REL)
+    if not os.path.isdir(base):
+        return []
+    return sorted(
+        d for d in os.listdir(base)
+        if os.path.isdir(os.path.join(base, d)) and not d.startswith("__")
+    )
+
+
+def _tests_text(ctx: RepoContext) -> str:
+    tdir = os.path.join(ctx.root, "tests")
+    if not os.path.isdir(tdir):
+        return ""
+    chunks = []
+    for name in sorted(os.listdir(tdir)):
+        if name.endswith(".py"):
+            chunks.append(ctx.read(f"tests/{name}") or "")
+    return "\n".join(chunks)
+
+
+@checker("kernel-contract", scope=("src/repro/kernels/*",), repo_level=True)
+def check(ctx: RepoContext) -> Iterator[Finding]:
+    """Cross-check every kernels/* subpackage against the trio contract."""
+    tests = _tests_text(ctx)
+    for pkg in _subpackages(ctx):
+        rel = f"{KERNELS_REL}/{pkg}"
+        missing = [f for f in TRIO
+                   if not os.path.exists(os.path.join(ctx.root, rel, f))]
+        if missing:
+            yield Finding(
+                "kernel-contract", f"{rel}/__init__.py", 1,
+                f"kernel subpackage {pkg!r} is missing {missing}; every "
+                "kernel ships the kernel/ops/ref trio (DESIGN.md §Kernels)")
+            continue
+        ops_tree = ctx.parse(f"{rel}/ops.py")
+        ref_tree = ctx.parse(f"{rel}/ref.py")
+        init_tree = ctx.parse(f"{rel}/__init__.py")
+        if ops_tree is None or ref_tree is None or init_tree is None:
+            continue  # unreadable/unparseable files surface as 'parse'
+        ops = _public_defs(ops_tree)
+        refs = _public_defs(ref_tree)
+        if not ops:
+            yield Finding("kernel-contract", f"{rel}/ops.py", 1,
+                          f"{pkg}/ops.py defines no public wrapper function")
+        ref_named = {n for n in refs if n.endswith("_ref")}
+        if not ref_named:
+            yield Finding(
+                "kernel-contract", f"{rel}/ref.py", 1,
+                f"{pkg}/ref.py defines no public '*_ref' oracle; the parity "
+                "tests need a jnp reference to compare the kernel against")
+        # __init__ re-exports resolve to real ops definitions
+        for node in init_tree.body:
+            if (isinstance(node, ast.ImportFrom) and node.module
+                    and node.module.endswith(f"{pkg}.ops")):
+                for a in node.names:
+                    if a.name != "*" and a.name not in ops:
+                        yield Finding(
+                            "kernel-contract", f"{rel}/__init__.py",
+                            node.lineno,
+                            f"__init__ re-exports {a.name!r} which "
+                            f"{pkg}/ops.py does not define")
+        # same-stem signature containment: foo_ref's required params <= foo's
+        for name, fn in ops.items():
+            ref_fn = refs.get(f"{name}_ref")
+            if ref_fn is None:
+                continue
+            op_names, _ = _params(fn)
+            _, ref_required = _params(ref_fn)
+            extra = ref_required - op_names
+            if extra:
+                yield Finding(
+                    "kernel-contract", f"{rel}/ops.py", fn.lineno,
+                    f"{name} is missing parameter(s) {sorted(extra)} that "
+                    f"its oracle {name}_ref requires; the public signatures "
+                    "must stay compatible for the parity tests")
+        # a reference-parity test exists
+        if f"repro.kernels.{pkg}" not in tests:
+            yield Finding(
+                "kernel-contract", f"{rel}/__init__.py", 1,
+                f"no module under tests/ imports repro.kernels.{pkg}; add a "
+                "reference-parity test (see tests/test_kernels.py)")
+        elif ref_named and not any(r in tests for r in sorted(ref_named)):
+            yield Finding(
+                "kernel-contract", f"{rel}/ref.py", 1,
+                f"tests import repro.kernels.{pkg} but never one of its "
+                f"oracles {sorted(ref_named)}; kernel output must be "
+                "compared against the reference, not just executed")

@@ -1,0 +1,125 @@
+"""pallas-hazards: lowering traps and dense-gather regressions in kernels.
+
+Two invariant classes, both learned the hard way:
+
+* ``pl.program_id`` has **no lowering rule inside the nested cond jaxpr**
+  that a ``pl.when`` body becomes (PR 8 hit this in interpret mode when
+  an int8 scale lookup moved inside the skip-dead-blocks cond).  The
+  checker flags ``program_id`` calls — and subscripts indexed by a name
+  bound from ``program_id`` — lexically inside a ``@pl.when(...)`` body
+  (or a ``jax.lax.cond`` branch function).  Hoist the lookup above the
+  cond; the value is loop-invariant per grid step anyway.
+* The paged-attention kernels exist to be **gather-free** (PR 5): no
+  dense materialized view of pooled KV.  ``jnp.take`` /
+  ``jnp.take_along_axis`` / ``.take(...)`` in a ``kernels/*/kernel.py``
+  or ``ops.py`` reintroduces exactly the traffic class the streaming
+  kernel eliminated — gathers belong in ``ref.py`` oracles only.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from repro.analysis.core import Finding, RepoContext, SourceFile, checker
+
+SCOPE = ("src/repro/kernels/*/kernel.py", "src/repro/kernels/*/ops.py")
+
+
+def _dotted(node: ast.AST) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_program_id_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and _dotted(node.func).endswith("program_id"))
+
+
+def _when_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call) and _dotted(dec.func).endswith(".when"):
+            return True
+    return False
+
+
+def _cond_branches(node: ast.Call) -> List[ast.expr]:
+    """Branch callables of a ``lax.cond``/``jax.lax.cond`` call."""
+    if _dotted(node.func).endswith("lax.cond"):
+        return list(node.args[1:])
+    return []
+
+
+def _pid_bound_names(tree: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and _is_program_id_call(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Tuple):
+            for t, v in zip(
+                (node.targets[0].elts
+                 if isinstance(node.targets[0], ast.Tuple) else []),
+                node.value.elts,
+            ):
+                if isinstance(t, ast.Name) and _is_program_id_call(v):
+                    names.add(t.id)
+    return names
+
+
+def _scan_cond_body(body_nodes: List[ast.AST], pid_names: Set[str],
+                    sf: SourceFile, context: str) -> Iterator[Finding]:
+    for stmt in body_nodes:
+        for node in ast.walk(stmt):
+            if _is_program_id_call(node):
+                yield Finding(
+                    "pallas-hazards", sf.rel, node.lineno,
+                    f"pl.program_id called inside {context}: program_id has "
+                    "no lowering rule in nested cond jaxprs (interpret mode "
+                    "included) — hoist the call above the cond")
+            elif isinstance(node, ast.Subscript):
+                idx_names = {n.id for n in ast.walk(node.slice)
+                             if isinstance(n, ast.Name)}
+                hit = idx_names & pid_names
+                if hit:
+                    yield Finding(
+                        "pallas-hazards", sf.rel, node.lineno,
+                        f"subscript indexed by program_id-bound name(s) "
+                        f"{sorted(hit)} inside {context}: the lookup lowers "
+                        "through the nested cond jaxpr where program_id is "
+                        "unavailable — hoist it above the cond (PR 8 "
+                        "regression class)")
+
+
+_GATHERS = ("take", "take_along_axis")
+
+
+@checker("pallas-hazards", scope=SCOPE)
+def check(sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+    """Flag program_id-in-cond lowering traps and dense gathers in
+    kernel/ops modules."""
+    pid_names = _pid_bound_names(sf.tree)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef) and _when_decorated(node):
+            yield from _scan_cond_body(node.body, pid_names, sf,
+                                       "a pl.when body")
+        elif isinstance(node, ast.Call):
+            for branch in _cond_branches(node):
+                if isinstance(branch, ast.Lambda):
+                    yield from _scan_cond_body([branch.body], pid_names, sf,
+                                               "a lax.cond branch")
+            fn = _dotted(node.func)
+            leaf = fn.rsplit(".", 1)[-1]
+            if leaf in _GATHERS and ("." in fn):
+                yield Finding(
+                    "pallas-hazards", sf.rel, node.lineno,
+                    f"{fn}(...) materializes a gathered view inside a "
+                    "kernel/ops module; the paged kernels are gather-free "
+                    "by contract — stream through the block table instead "
+                    "(gathers belong in ref.py oracles)")

@@ -1,0 +1,149 @@
+"""site-grammar: site-name literals follow the ``core/plan.py`` grammar.
+
+Execution sites are strings shared across three subsystems (the model's
+plan routing, the simulator op graph, PTQ calibration):
+``L{li}.{kind}.{op}`` for GEMMs, ``lm_head``, and ``L{li}.kv.{k,v}`` for
+KV storage (docs/PLANS.md §Site naming grammar).  A typo'd literal —
+``"L0.attn.qq"``, a glob rule matching nothing — fails silently: globs
+that match no site simply never fire.  This checker cross-checks every
+site-shaped string literal in ``src/repro`` against the vocabulary it
+extracts from ``core/plan.py`` itself (``_BLOCK_GEMMS``/``_ATTN_OPS``
+plus the MLP/MoE extras of ``block_site_ops`` — the same tables
+``model_sites``/``kv_sites`` generate from), so the checker and the
+registry cannot drift apart.
+
+A literal is treated as site-shaped when it is ``lm_head``, starts with a
+concrete ``L<digit>.`` layer prefix, or is a glob whose words overlap the
+site vocabulary (``"*.qk|*.pv"``, ``"*_proj"``); ordinary globs like
+``"*.json"`` are ignored.  Each ``|``-alternative must then match at
+least one generatable site.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import re
+from typing import Dict, Iterator, List, Set, Tuple
+
+from repro.analysis.core import Finding, RepoContext, SourceFile, checker
+
+PLAN_REL = "src/repro/core/plan.py"
+MAX_LAYERS = 128  # universe depth: larger than any zoo config
+
+# fallback vocabulary (used when core/plan.py is absent, e.g. in fixture
+# repos) — mirrors plan.py's tables at the time of writing
+_DEFAULT_GEMMS: Dict[str, Tuple[str, ...]] = {
+    "attn": ("q_proj", "kv_proj", "qk", "pv", "o_proj"),
+    "local": ("q_proj", "kv_proj", "qk", "pv", "o_proj"),
+    "xattn": ("q_proj", "kv_proj", "qk", "pv", "o_proj"),
+    "rglru": ("in_proj", "gates", "out_proj"),
+    "mlstm": ("up_proj", "qkv", "gates", "down_proj"),
+    "slstm": ("gates_in", "up", "down"),
+}
+_DEFAULT_EXTRAS = ("router", "expert_up", "expert_down", "up", "down")
+
+_GLOB_CHARS = set("*?[")
+_ALT_RE = re.compile(r"^[A-Za-z0-9_.*?\[\]\-]+$")
+_WORD_RE = re.compile(r"[a-z0-9_]+")
+
+
+def _extract_vocab(ctx: RepoContext) -> Tuple[Dict[str, Tuple[str, ...]], Tuple[str, ...]]:
+    """(kind -> GEMM ops, extra MLP/MoE ops) from core/plan.py's AST."""
+    tree = ctx.parse(PLAN_REL)
+    if tree is None:
+        return _DEFAULT_GEMMS, _DEFAULT_EXTRAS
+    consts: Dict[str, Tuple[str, ...]] = {}
+    gemms: Dict[str, Tuple[str, ...]] = {}
+    extras: List[str] = []
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name, val = node.targets[0].id, node.value
+            if isinstance(val, ast.Tuple) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in val.elts
+            ):
+                consts[name] = tuple(e.value for e in val.elts)
+            elif isinstance(val, ast.Dict) and name == "_BLOCK_GEMMS":
+                for k, v in zip(val.keys, val.values):
+                    if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                        continue
+                    if isinstance(v, ast.Name):
+                        gemms[k.value] = consts.get(v.id, ())
+                    elif isinstance(v, ast.Tuple):
+                        gemms[k.value] = tuple(
+                            e.value for e in v.elts
+                            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                        )
+        elif isinstance(node, ast.FunctionDef) and node.name == "block_site_ops":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.List):
+                    extras += [e.value for e in sub.elts
+                               if isinstance(e, ast.Constant)
+                               and isinstance(e.value, str)]
+    if not gemms:
+        return _DEFAULT_GEMMS, _DEFAULT_EXTRAS
+    return gemms, tuple(extras) or _DEFAULT_EXTRAS
+
+
+def _universe(ctx: RepoContext) -> Tuple[Set[str], Set[str]]:
+    """(every generatable site name, vocabulary hint words).  Cached on
+    the context — building it walks plan.py once per run."""
+    cached = getattr(ctx, "_site_universe", None)
+    if cached is not None:
+        return cached
+    gemms, extras = _extract_vocab(ctx)
+    sites: Set[str] = {"lm_head"}
+    for li in range(MAX_LAYERS):
+        for kind, ops in gemms.items():
+            for op in tuple(ops) + tuple(extras):
+                sites.add(f"L{li}.{kind}.{op}")
+        sites.add(f"L{li}.kv.k")
+        sites.add(f"L{li}.kv.v")
+    hints: Set[str] = {"kv", "lm_head"} | set(gemms) | set(extras)
+    for ops in gemms.values():
+        hints.update(ops)
+        hints.update(op.rsplit("_", 1)[-1] for op in ops)  # "proj" etc.
+    ctx._site_universe = (sites, hints)
+    return sites, hints
+
+
+def _site_shaped(alt: str, hints: Set[str]) -> bool:
+    if alt == "lm_head" or re.match(r"^L\d+\.", alt):
+        return True
+    if not (_GLOB_CHARS & set(alt)) or not _ALT_RE.match(alt):
+        return False
+    words = _WORD_RE.findall(alt.lower())
+    return any(w in hints for w in words)
+
+
+@checker("site-grammar", scope=("src/repro/*",))
+def check(sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+    """Validate site-shaped string literals against the plan grammar."""
+    if sf.rel.startswith("src/repro/analysis/"):
+        return  # the linter's own vocabulary tables are not site usage
+    sites, hints = _universe(ctx)
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Constant) and isinstance(node.value, str)):
+            continue
+        s = node.value
+        if not s or len(s) > 120 or any(c.isspace() for c in s):
+            continue
+        alts = s.split("|")
+        if not all(alts):
+            continue
+        if not any(_site_shaped(a, hints) for a in alts):
+            continue
+        for alt in alts:
+            if alt == "default":
+                continue  # from_spec's fallback key rides along in rule dicts
+            ok = (alt in sites if not (_GLOB_CHARS & set(alt))
+                  else any(fnmatch.fnmatchcase(site, alt) for site in sites))
+            if not ok:
+                yield Finding(
+                    "site-grammar", sf.rel, node.lineno,
+                    f"site pattern {alt!r} matches no site the "
+                    "L{li}.{kind}.{op} / lm_head / L{li}.kv.{k,v} grammar "
+                    "can generate (vocabulary from core/plan.py); a rule "
+                    "that matches nothing never fires — fix the typo or "
+                    "drop the rule (docs/PLANS.md §Site naming grammar)")

@@ -1,0 +1,117 @@
+"""trace-purity: no ambient wall clock or RNG inside traced serving paths.
+
+Everything under ``src/repro/{models,kernels,serve}`` executes inside (or
+feeds) jitted/replayed code: the traffic harness replays whole serving
+runs on a virtual clock, the serve engine's outputs must be a pure
+function of (requests, seed, plan), and prefix reuse replays pooled KV
+verbatim.  A stray ``time.time()`` or ``np.random.*`` call breaks all of
+that invisibly — PR 6 had to hunt down every internal wall-clock read to
+make replay deterministic.  Clocks are injected (``ServeEngine(clock=)``)
+and randomness flows through explicit ``jax.random`` keys or caller-owned
+``numpy`` Generators.
+
+The single sanctioned wall-clock entry point is
+``src/repro/serve/clock.py`` (the injected-clock plumbing), which carries
+its own justified suppression.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Set
+
+from repro.analysis.core import Finding, RepoContext, SourceFile, checker
+
+SCOPE = ("src/repro/models/*", "src/repro/kernels/*", "src/repro/serve/*")
+
+# module attribute accesses that read ambient time/randomness.  Key: the
+# *real* module name (aliases are resolved from the file's imports);
+# value: banned attribute names, or "*" for the whole namespace.
+BANNED_ATTRS: Dict[str, Set[str]] = {
+    "time": {"time", "time_ns", "monotonic", "monotonic_ns", "perf_counter",
+             "perf_counter_ns", "process_time", "sleep", "localtime",
+             "gmtime"},
+    "datetime": {"now", "utcnow", "today"},  # via datetime.datetime.now etc.
+    "numpy.random": {"*"},
+    "random": {"*"},
+    "secrets": {"*"},
+    "uuid": {"uuid1", "uuid4"},
+}
+BANNED_OS = {"urandom", "getrandom"}
+# direct ``from time import time`` style imports of banned names
+BANNED_FROM = {("time", "time"), ("time", "monotonic"),
+               ("time", "perf_counter"), ("random", "random"),
+               ("random", "randint"), ("random", "choice"),
+               ("random", "shuffle"), ("random", "seed")}
+
+
+def _import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to the real module paths they stand for."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an attribute chain (``np.random.rand`` ->
+    "np.random.rand"); "" when the chain roots in a call/subscript."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+@checker("trace-purity", scope=SCOPE)
+def check(sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+    """Ban wall-clock/ambient-RNG reads in models/kernels/serve."""
+    aliases = _import_aliases(sf.tree)
+    for local, real in aliases.items():
+        mod, _, attr = real.rpartition(".")
+        if (mod, attr) in BANNED_FROM:
+            # the import itself is the hazard: a bare ``time()`` call site
+            # is indistinguishable from any other callable afterwards
+            yield Finding(
+                "trace-purity", sf.rel, 1,
+                f"'from {mod} import {attr}' pulls ambient "
+                f"{'time' if mod == 'time' else 'randomness'} into a traced "
+                f"path; inject a clock/PRNG key instead (docs/ANALYSIS.md)")
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Attribute):
+            continue
+        dotted = _dotted(node)
+        if not dotted:
+            continue
+        head, rest = dotted.split(".", 1) if "." in dotted else (dotted, "")
+        real = aliases.get(head, head)
+        chain = f"{real}.{rest}" if rest else real
+        # normalize datetime.datetime.now -> datetime.now for matching
+        chain = chain.replace("datetime.datetime.", "datetime.")
+        for mod, banned in BANNED_ATTRS.items():
+            prefix = mod + "."
+            if not chain.startswith(prefix):
+                continue
+            attr = chain[len(prefix):].split(".")[0]
+            if "*" in banned or attr in banned:
+                what = ("wall clock" if mod in ("time", "datetime")
+                        else "ambient randomness")
+                yield Finding(
+                    "trace-purity", sf.rel, node.lineno,
+                    f"{chain} reads {what} inside a traced serving path; "
+                    "inject the clock (ServeEngine(clock=)) or thread an "
+                    "explicit jax.random key / numpy Generator "
+                    "(docs/ANALYSIS.md §trace-purity)")
+                break
+        if chain.startswith("os.") and chain.split(".")[1] in BANNED_OS:
+            yield Finding(
+                "trace-purity", sf.rel, node.lineno,
+                f"{chain} reads OS entropy inside a traced serving path; "
+                "thread an explicit PRNG key instead")

@@ -1,0 +1,272 @@
+"""Framework: findings, suppressions, the checker registry, and the runner.
+
+A *checker* is a named function registered via :func:`checker`.  Two
+shapes exist:
+
+* **per-file** — ``fn(sf: SourceFile, ctx: RepoContext) -> Iterable[Finding]``,
+  invoked for every collected ``.py`` file whose repo-relative path matches
+  the checker's ``scope`` globs;
+* **repo-level** (``repo_level=True``) — ``fn(ctx) -> Iterable[Finding]``,
+  invoked once per run when at least one collected file matches ``scope``
+  (these checkers cross-reference fixed locations: the kernels tree, the
+  config dataclasses, the flag registry).
+
+Suppression comments (docs/ANALYSIS.md §Suppressions)::
+
+    # repro-lint: disable=<check>[,<check>...] [-- justification]
+
+On a code line the suppression applies to findings anchored to that line;
+on a line of its own it applies to the whole file.  ``disable=all``
+covers every check.  ``--strict`` turns justification-less suppressions
+and unknown check names into findings themselves, so the suppression
+surface cannot rot silently.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,-]+)(?:\s+--\s*(\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    check: str
+    path: str  # repo-root-relative, posix separators
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.check}] {self.message}"
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int
+    checks: Tuple[str, ...]
+    file_level: bool
+    justification: Optional[str]
+
+
+class SourceFile:
+    """One collected ``.py`` file: text, parsed tree, suppressions."""
+
+    def __init__(self, abspath: str, rel: str):
+        self.abspath = abspath
+        self.rel = rel
+        with open(abspath, encoding="utf-8") as f:
+            self.text = f.read()
+        self.lines = self.text.splitlines()
+        self.suppressions: List[Suppression] = []
+        for i, line in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(line)
+            if m:
+                checks = tuple(c.strip() for c in m.group(1).split(",") if c.strip())
+                self.suppressions.append(Suppression(
+                    i, checks, line.lstrip().startswith("#"), m.group(2)
+                ))
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree: Optional[ast.AST] = ast.parse(self.text, filename=rel)
+        except SyntaxError as e:
+            self.tree = None
+            self.parse_error = e
+
+    def suppressed(self, check: str, line: int) -> bool:
+        for s in self.suppressions:
+            if check in s.checks or "all" in s.checks:
+                if s.file_level or s.line == line:
+                    return True
+        return False
+
+
+@dataclasses.dataclass
+class _Checker:
+    name: str
+    fn: Callable
+    scope: Tuple[str, ...]
+    repo_level: bool
+    doc: str
+
+
+CHECKERS: Dict[str, _Checker] = {}
+
+
+def checker(name: str, scope: Sequence[str], repo_level: bool = False):
+    """Register a checker under ``name`` for files matching ``scope``
+    (fnmatch globs over repo-relative posix paths)."""
+
+    def deco(fn):
+        CHECKERS[name] = _Checker(name, fn, tuple(scope), repo_level,
+                                  (fn.__doc__ or "").strip().splitlines()[0]
+                                  if fn.__doc__ else "")
+        return fn
+
+    return deco
+
+
+def _in_scope(rel: str, scope: Tuple[str, ...]) -> bool:
+    return any(fnmatch.fnmatchcase(rel, pat) for pat in scope)
+
+
+def find_repo_root(start: str) -> str:
+    """Nearest ancestor carrying ``pyproject.toml`` (the linter resolves
+    cross-file anchors — kernels tree, docs, flag registry — from here)."""
+    p = os.path.abspath(start)
+    if os.path.isfile(p):
+        p = os.path.dirname(p)
+    while True:
+        if os.path.exists(os.path.join(p, "pyproject.toml")):
+            return p
+        parent = os.path.dirname(p)
+        if parent == p:
+            return os.path.abspath(start if os.path.isdir(start)
+                                   else os.path.dirname(start))
+        p = parent
+
+
+_SKIP_DIRS = {".git", "__pycache__", "artifacts", ".github", ".ruff_cache",
+              "build", "dist"}
+
+
+class RepoContext:
+    """Repo-wide state shared by every checker in one run: the root, the
+    collected files, and lazily parsed anchor files."""
+
+    def __init__(self, root: str, files: List[SourceFile]):
+        self.root = root
+        self.files = files
+        self.by_rel: Dict[str, SourceFile] = {f.rel: f for f in files}
+        self._parsed: Dict[str, Optional[ast.AST]] = {}
+        self._text: Dict[str, Optional[str]] = {}
+        self.extra_findings: List[Finding] = []
+
+    def rel(self, abspath: str) -> str:
+        return os.path.relpath(abspath, self.root).replace(os.sep, "/")
+
+    def read(self, rel: str) -> Optional[str]:
+        """Text of a repo file by relative path (None if absent)."""
+        if rel not in self._text:
+            path = os.path.join(self.root, rel)
+            if os.path.exists(path):
+                with open(path, encoding="utf-8") as f:
+                    self._text[rel] = f.read()
+            else:
+                self._text[rel] = None
+        return self._text[rel]
+
+    def parse(self, rel: str) -> Optional[ast.AST]:
+        """Parsed AST of a repo ``.py`` file (collected or not); None if
+        the file is absent or unparseable."""
+        if rel not in self._parsed:
+            text = self.read(rel)
+            try:
+                self._parsed[rel] = ast.parse(text, filename=rel) if text is not None else None
+            except SyntaxError:
+                self._parsed[rel] = None
+        return self._parsed[rel]
+
+    def scoped(self, scope: Tuple[str, ...]) -> List[SourceFile]:
+        return [f for f in self.files if _in_scope(f.rel, scope)]
+
+
+def collect_files(root: str, targets: Sequence[str]) -> List[SourceFile]:
+    out: List[SourceFile] = []
+    seen: Set[str] = set()
+    for t in targets:
+        t = os.path.abspath(t)
+        if os.path.isfile(t):
+            paths = [t]
+        else:
+            paths = []
+            for dirpath, dirnames, filenames in os.walk(t):
+                dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS)
+                paths += [os.path.join(dirpath, f) for f in sorted(filenames)
+                          if f.endswith(".py")]
+        for p in paths:
+            if p not in seen:
+                seen.add(p)
+                out.append(SourceFile(p, os.path.relpath(p, root).replace(os.sep, "/")))
+    return out
+
+
+def _strict_findings(ctx: RepoContext) -> List[Finding]:
+    """Under ``--strict``, police the suppression surface itself."""
+    out = []
+    known = set(CHECKERS) | {"all", "parse", "suppression"}
+    for f in ctx.files:
+        for s in f.suppressions:
+            unknown = [c for c in s.checks if c not in known]
+            if unknown:
+                out.append(Finding(
+                    "suppression", f.rel, s.line,
+                    f"suppression names unknown check(s) {unknown}; known: "
+                    f"{', '.join(sorted(CHECKERS))}"))
+            if not s.justification:
+                out.append(Finding(
+                    "suppression", f.rel, s.line,
+                    "suppression without justification; append "
+                    "'-- <one-line reason>' (required under --strict)"))
+    return out
+
+
+def run_analysis(targets: Sequence[str], root: Optional[str] = None,
+                 disable: Sequence[str] = (), strict: bool = False,
+                 ) -> Tuple[List[Finding], Dict[str, object]]:
+    """Run every registered checker over ``targets``.
+
+    Returns ``(findings, stats)`` — findings already filtered through
+    suppression comments and sorted by (path, line, check).
+    """
+    if not targets:
+        raise ValueError("no targets: pass at least one file or directory")
+    root = os.path.abspath(root) if root else find_repo_root(targets[0])
+    files = collect_files(root, targets)
+    ctx = RepoContext(root, files)
+
+    raw: List[Finding] = []
+    for f in files:
+        if f.parse_error is not None:
+            raw.append(Finding("parse", f.rel, f.parse_error.lineno or 1,
+                               f"syntax error: {f.parse_error.msg}"))
+    active = [c for name, c in CHECKERS.items() if name not in disable]
+    for c in active:
+        if c.repo_level:
+            if ctx.scoped(c.scope) or not c.scope:
+                raw.extend(c.fn(ctx))
+        else:
+            for f in ctx.scoped(c.scope):
+                if f.tree is None:
+                    continue
+                raw.extend(c.fn(f, ctx))
+    if strict:
+        raw.extend(_strict_findings(ctx))
+
+    findings = []
+    for fd in raw:
+        sf = ctx.by_rel.get(fd.path)
+        if sf is not None and fd.check != "suppression" and sf.suppressed(fd.check, fd.line):
+            continue
+        findings.append(fd)
+    findings.sort(key=lambda fd: (fd.path, fd.line, fd.check))
+
+    counts: Dict[str, int] = {}
+    for fd in findings:
+        counts[fd.check] = counts.get(fd.check, 0) + 1
+    stats = {
+        "root": root,
+        "n_files": len(files),
+        "checkers": sorted(c.name for c in active),
+        "counts": counts,
+        "strict": strict,
+    }
+    return findings, stats

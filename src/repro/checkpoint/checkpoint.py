@@ -20,7 +20,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import numpy as np
 

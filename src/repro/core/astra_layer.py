@@ -31,7 +31,7 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QTensor, quantize
+from repro.core.quant import quantize
 
 MODES = ("exact", "int8", "sc")
 

@@ -23,7 +23,6 @@ import dataclasses
 from typing import Dict, List
 
 from repro.configs.base import ArchConfig
-from repro.core.mapping import ElementwiseOp, MatmulOp
 from repro.core.simulator import ModelReport, model_ops
 
 

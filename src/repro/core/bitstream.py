@@ -28,7 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import MAG_MAX, STREAM_LEN
+from repro.core.quant import STREAM_LEN
 
 N_WORDS = STREAM_LEN // 32  # 4
 

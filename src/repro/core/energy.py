@@ -17,7 +17,6 @@ CPU/GPU/TPU) are what we validate against.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict
 
 from repro.core import photonics

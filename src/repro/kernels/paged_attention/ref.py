@@ -6,7 +6,6 @@ the memory-hungry formulation it optimizes away.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -31,7 +31,6 @@ import traceback
 from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
 from repro.launch.mesh import make_production_mesh

@@ -67,6 +67,7 @@ from repro.configs import get_arch
 from repro.core.astra_layer import MODES
 from repro.core.energy import AstraChipConfig
 from repro.core.plan import PRESET_PLANS, ExecutionPlan
+from repro.launch.flags import add_serve_flags, validate_serve_flags
 from repro.models.model import Model
 from repro.models.transformer import ModelOptions
 from repro.serve import (
@@ -136,6 +137,7 @@ def _run_engine(model, params, prompts, args, sampler):
     cfg = ServeConfig(max_slots=args.max_slots or len(prompts), max_len=max_len,
                       chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed,
                       kv_block_size=args.kv_block_size,
+                      kv_pool_blocks=args.kv_pool_blocks,
                       prefix_cache=not args.no_prefix_cache,
                       prefill_chunk_tokens=args.prefill_chunk_tokens,
                       attn_impl=args.attn_impl, kv_quant=args.kv_quant)
@@ -163,81 +165,6 @@ def _parse_plan(ap: argparse.ArgumentParser, spec: str) -> ExecutionPlan:
             "  or JSON rules, e.g. "
             '\'{"*.qk|*.pv": "int8", "*_proj": "sc", "default": "exact"}\''
         )
-
-
-def _validate_kv_flags(ap: argparse.ArgumentParser, args) -> None:
-    """Validate the paged-KV flags at the CLI, not deep inside the engine
-    (the engine re-checks the pool-capacity arithmetic at construction)."""
-    if args.kv_block_size < 0:
-        ap.error(
-            f"--kv-block-size: {args.kv_block_size} is negative; pass a "
-            "positive block size (tokens per KV block, docs/SERVING.md) or "
-            "0 for the dense per-slot layout"
-        )
-    if args.no_prefix_cache and args.kv_block_size == 0:
-        ap.error(
-            "--no-prefix-cache only applies to the paged KV cache; it is "
-            "meaningless with --kv-block-size 0 (dense layout has no "
-            "prefix cache to disable)"
-        )
-    if args.prefill_chunk_tokens < 0:
-        ap.error(
-            f"--prefill-chunk-tokens: {args.prefill_chunk_tokens} is "
-            "negative; pass a per-round token budget (docs/SERVING.md "
-            "§Scheduling) or 0 for blocking full-prompt admission"
-        )
-    if args.attn_impl not in ModelOptions.ATTN_IMPLS:
-        ap.error(
-            f"--attn-impl: {args.attn_impl!r} unknown; valid: "
-            f"{', '.join(ModelOptions.ATTN_IMPLS)} (flash routes decode "
-            "through the gather-free paged-attention kernel where the "
-            "plan keeps qk/pv exact)"
-        )
-    if args.kv_quant not in ModelOptions.KV_QUANTS:
-        ap.error(
-            f"--kv-quant: {args.kv_quant!r} unknown; valid: "
-            f"{', '.join(ModelOptions.KV_QUANTS)} (int8 stores paged KV "
-            "blocks quantized against calibrated per-KV-head scales, "
-            "docs/SERVING.md §KV quantization)"
-        )
-    if args.kv_quant != "none" and args.kv_block_size == 0:
-        ap.error(
-            "--kv-quant int8 requires the paged KV layout; pass "
-            "--kv-block-size > 0 (dense per-slot caches stay in model "
-            "dtype)"
-        )
-    if args.kv_quant != "none" and not args.calibrate:
-        ap.error(
-            "--kv-quant int8 needs calibrated per-KV-head scales; add "
-            "--calibrate so the PTQ pass bakes KV scales into the plan "
-            "(docs/SERVING.md §KV quantization)"
-        )
-
-
-def _validate_traffic_flags(ap: argparse.ArgumentParser, args) -> None:
-    """Validate the open-loop replay flags at the CLI (FrontendConfig
-    re-checks its own invariants at construction)."""
-    if not args.traffic_trace:
-        for flag, val, default in (("--max-queue", args.max_queue, -1),
-                                   ("--queue-timeout", args.queue_timeout, 0.0),
-                                   ("--virtual-step", args.virtual_step, 0.0)):
-            if val != default:
-                ap.error(f"{flag} only applies to open-loop replay; pass "
-                         "--traffic-trace <file or spec> to select it")
-        return
-    if args.max_queue < -1:
-        ap.error(f"--max-queue: {args.max_queue} is invalid; pass a queue "
-                 "capacity >= 0 (0 = no waiting room) or -1 for unbounded")
-    if args.queue_timeout < 0:
-        ap.error(f"--queue-timeout: {args.queue_timeout} is negative; pass "
-                 "a timeout in seconds > 0, or 0 to disable")
-    if args.virtual_step < 0:
-        ap.error(f"--virtual-step: {args.virtual_step} is negative; pass a "
-                 "virtual round time in seconds > 0, or 0 for wall-clock "
-                 "replay")
-    if args.compare_exact:
-        ap.error("--compare-exact is not supported with --traffic-trace "
-                 "(the replay already checks streamed-vs-terminal parity)")
 
 
 def _load_trace(ap: argparse.ArgumentParser, spec: str, cfg):
@@ -268,13 +195,14 @@ def _run_traffic(model, params, trace, args, sampler):
     serve_cfg = ServeConfig(
         max_slots=args.max_slots or 4, max_len=max_len,
         chunk_steps=args.chunk_steps, sampler=sampler, seed=args.seed,
-        kv_block_size=block, prefix_cache=not args.no_prefix_cache,
+        kv_block_size=block, kv_pool_blocks=args.kv_pool_blocks,
+        prefix_cache=not args.no_prefix_cache,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
         attn_impl=args.attn_impl, kv_quant=args.kv_quant)
     fe_cfg = FrontendConfig(
         max_queue_depth=None if args.max_queue < 0 else args.max_queue,
         queue_timeout_s=args.queue_timeout or None,
-        max_concurrency=None)
+        max_concurrency=args.max_concurrency or None)
     virtual = args.virtual_step > 0
 
     def stack(force_virtual=False):
@@ -328,58 +256,17 @@ def main(argv=None):
                     help="comma list of prompt lengths cycled over the batch, "
                          "e.g. 16,32,64 (continuous batching handles the mix)")
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mode", default="int8", choices=list(MODES),
-                    help="uniform execution mode (shorthand for --plan <mode>)")
-    ap.add_argument("--plan", default="",
-                    help="per-site execution plan: preset "
-                         f"({', '.join(sorted(PRESET_PLANS))}), uniform mode, "
-                         "or JSON glob rules; overrides --mode")
     ap.add_argument("--calibrate", action="store_true",
                     help="run a PTQ calibration pass (per-site activation "
                          "scales) on a synthetic batch before serving")
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--top-k", type=int, default=0)
-    ap.add_argument("--chunk-steps", type=int, default=8,
-                    help="fused decode steps per dispatch")
-    ap.add_argument("--max-slots", type=int, default=0,
-                    help="engine slots (0 = one per request)")
-    ap.add_argument("--kv-block-size", type=int, default=16,
-                    help="paged KV cache block size in tokens "
-                         "(docs/SERVING.md); 0 = dense per-slot caches")
-    ap.add_argument("--no-prefix-cache", action="store_true",
-                    help="disable radix-tree prefix reuse (paged mode only)")
-    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
-                    help="chunked-prefill scheduler token budget per round "
-                         "(docs/SERVING.md §Scheduling); 0 = blocking "
-                         "full-prompt admission")
-    ap.add_argument("--kv-quant", default="none",
-                    help="paged KV pool storage dtype (docs/SERVING.md "
-                         "§KV quantization): none = model dtype; int8 = "
-                         "quantized blocks against calibrated per-KV-head "
-                         "scales (requires --calibrate and a paged "
-                         "--kv-block-size)")
-    ap.add_argument("--attn-impl", default="naive",
-                    help="attention implementation (docs/SERVING.md "
-                         "§Decode-attention memory model): naive = jnp "
-                         "einsum; flash = Pallas kernels (gather-free "
-                         "streaming decode over the paged pool, flash "
-                         "prefill; interpret mode on CPU — correct but "
-                         "slow off-TPU)")
     ap.add_argument("--compare-exact", action="store_true",
                     help="also run exact mode and report token agreement")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--traffic-trace", default="",
                     help="open-loop replay instead of one-shot batch: a "
                          "trace JSON written by repro.traffic, or an inline "
                          "spec like 'chat:rate=4,n=32,seed=0' "
                          "(docs/SERVING.md §Traffic)")
-    ap.add_argument("--max-queue", type=int, default=-1,
-                    help="admission queue capacity (0 = no waiting room, "
-                         "-1 = unbounded); overflow is rejected as "
-                         "queue_full")
-    ap.add_argument("--queue-timeout", type=float, default=0.0,
-                    help="reject requests waiting longer than this many "
-                         "seconds (queue_timeout); 0 = wait forever")
+    add_serve_flags(ap)  # engine / plan / paged-KV / frontend surface
     ap.add_argument("--virtual-step", type=float, default=0.0,
                     help="replay on a virtual clock, each engine round "
                          "costing this many virtual seconds (deterministic "
@@ -391,8 +278,7 @@ def main(argv=None):
                     help="max inter-token-gap bound in seconds for the "
                          "goodput line")
     args = ap.parse_args(argv)
-    _validate_kv_flags(ap, args)
-    _validate_traffic_flags(ap, args)
+    validate_serve_flags(ap, args)
 
     cfg = get_arch(args.arch)
     if args.reduced:

@@ -17,11 +17,9 @@ Usage (tiny model, a few hundred steps on CPU):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch

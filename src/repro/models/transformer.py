@@ -12,7 +12,6 @@ Serving state is a pytree mirroring the parameter stacking:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
@@ -26,7 +25,7 @@ from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.layers import (
-    dense, embed_tokens, embedding_init, head_apply, head_init,
+    embed_tokens, embedding_init, head_apply, head_init,
     mlp_apply, mlp_init, norm_apply, norm_init,
 )
 
@@ -183,8 +182,8 @@ def block_state_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
                 raise ValueError("kv_quant='int8' needs a calibrated plan")
             k_scale = plan.kv_group_scale(tuple(f"L{li}.kv.k" for li in layers))
             v_scale = plan.kv_group_scale(tuple(f"L{li}.kv.v" for li in layers))
-            return attn.init_paged_quant_cache(cfg, n_blocks, block_size,
-                                               k_scale, v_scale)
+            return attn.init_paged_quant_cache(  # repro-lint: disable=determinism-gates -- allocation dispatch only; ServeEngine.__init__ runs kv_quant_reject_reason before any engine reaches this path
+                cfg, n_blocks, block_size, k_scale, v_scale)
         return attn.init_paged_cache(cfg, n_blocks, block_size)
     if kind in ("attn", "local", "xattn"):
         return attn.init_cache(cfg, kind, batch, max_len)

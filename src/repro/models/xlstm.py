@@ -47,7 +47,6 @@ def mlstm_init(key, cfg: ArchConfig):
     d = cfg.d_model
     e = 2 * d
     h = cfg.n_heads
-    dh = e // h
     ks = jax.random.split(key, 8)
     return {
         "w_up": dense_init(ks[0], d, 2 * e),  # [x | gate]

@@ -27,7 +27,7 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import re
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

@@ -16,7 +16,7 @@ tests pin down):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 from repro.checkpoint import CheckpointManager
 from repro.parallel.sharding import param_specs

@@ -1,0 +1,22 @@
+"""The one sanctioned wall-clock entry point for the serving stack.
+
+Everything else under ``src/repro/serve`` is trace-pure by lint
+(``repro.analysis`` §trace-purity): the engine, scheduler, and frontend
+read time only through an injected ``clock`` callable so the traffic
+harness can replay whole serving runs on a virtual clock and get
+bit-identical outputs.  ``ServeEngine(clock=None)`` falls back to
+:data:`wall_clock` — *this* module is where that ambient read lives, and
+it lives nowhere else.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+# live serving default; replayed runs inject a virtual clock instead
+wall_clock: Callable[[], float] = time.time  # repro-lint: disable=trace-purity -- the single sanctioned ambient-clock read; engines default to it only when no clock is injected
+
+
+def resolve_clock(clock: Callable[[], float] | None) -> Callable[[], float]:
+    """Injected clock if given, else the ambient wall clock."""
+    return clock if clock is not None else wall_clock

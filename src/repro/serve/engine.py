@@ -52,7 +52,6 @@ KV memory comes in two layouts (docs/SERVING.md):
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from functools import lru_cache
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -65,6 +64,7 @@ from repro.core.energy import AstraChipConfig
 from repro.core.plan import validate_site_registry
 from repro.models.attention import BlockTables
 from repro.models.model import Model
+from repro.serve.clock import resolve_clock
 from repro.serve.accounting import (
     RequestHardwareReport, RequestTiming, request_hardware_report, request_timing,
 )
@@ -259,7 +259,8 @@ class ServeEngine:
         """``plan`` (optional, any ``ExecutionPlan.from_spec`` form) selects
         the execution plan for this engine, overriding the model's own.
 
-        ``clock`` (optional) replaces ``time.time`` for every timestamp the
+        ``clock`` (optional) replaces the ambient wall clock
+        (:data:`repro.serve.clock.wall_clock`) for every timestamp the
         engine takes (submission, admission, token arrivals, completion) —
         the traffic replay harness injects a virtual clock here so latency
         trajectories are deterministic (docs/SERVING.md §Traffic).
@@ -306,7 +307,7 @@ class ServeEngine:
         self.params = params
         self.config = config
         self.chip = chip or AstraChipConfig()
-        self.clock = clock or time.time
+        self.clock = resolve_clock(clock)
         self.token_sink = token_sink
         self._fused = make_fused_decode(model)
         self._queue: deque[Request] = deque()

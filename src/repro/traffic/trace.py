@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 

@@ -1,0 +1,443 @@
+"""repro.analysis: planted violations, clean negatives, suppressions, CLI.
+
+Each checker gets (a) a tmp mini-repo fixture with one planted violation
+it must find and (b) a clean fixture it must stay silent on — so a
+checker that silently stops matching fails CI here, not six PRs later.
+The meta-test at the bottom pins the real repo itself lint-clean under
+``--strict``: the linter gates CI (.github/workflows/ci.yml §lint), so
+the tree must never commit a violation without a justified suppression.
+"""
+import json
+import os
+import textwrap
+
+from repro.analysis import CHECKERS, run_analysis
+from repro.analysis.__main__ import main as cli_main
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_repo(tmp_path, files):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname = 'fixture'\n")
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return tmp_path
+
+
+def lint(tmp_path, check=None, strict=False):
+    findings, _ = run_analysis([str(tmp_path / "src")], root=str(tmp_path),
+                               strict=strict)
+    if check is not None:
+        findings = [f for f in findings if f.check == check]
+    return findings
+
+
+def test_registry_has_the_contracted_checkers():
+    assert set(CHECKERS) >= {
+        "trace-purity", "pallas-hazards", "kernel-contract",
+        "site-grammar", "config-surface", "determinism-gates",
+    }
+    for c in CHECKERS.values():
+        assert c.doc, f"checker {c.name} needs a one-line docstring"
+
+
+# ------------------------------------------------------------ trace-purity
+def test_trace_purity_planted(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/hot.py": """
+            import time
+            import numpy as np
+
+            def stamp():
+                return time.time()
+
+            def jitter():
+                return np.random.rand(3)
+        """,
+    })
+    found = lint(tmp_path, "trace-purity")
+    assert {f.line for f in found} == {6, 9}
+    assert any("time.time" in f.message for f in found)
+    assert any("numpy.random" in f.message for f in found)
+
+
+def test_trace_purity_resolves_import_aliases(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/models/m.py": """
+            import numpy.random as nr
+            from time import monotonic
+
+            def f():
+                return nr.default_rng(), monotonic()
+        """,
+    })
+    msgs = [f.message for f in lint(tmp_path, "trace-purity")]
+    assert any("numpy.random" in m for m in msgs)
+    assert any("from time import monotonic" in m for m in msgs)
+
+
+def test_trace_purity_clean_on_injected_clock_and_keys(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/cold.py": """
+            import jax
+
+            def step(clock, key):
+                now = clock()
+                key, sub = jax.random.split(key)
+                return now, jax.random.uniform(sub, (2,))
+        """,
+        # out of scope entirely: launch scripts may read the wall clock
+        "src/repro/launch/timed.py": "import time\nT0 = time.time()\n",
+    })
+    assert lint(tmp_path, "trace-purity") == []
+
+
+# ---------------------------------------------------------- pallas-hazards
+PALLAS_BAD = """
+    from jax.experimental import pallas as pl
+
+    def body(x_ref, o_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i < 4)
+        def _():
+            j = pl.program_id(1)
+            o_ref[0] = x_ref[j]
+"""
+
+
+def test_pallas_hazards_planted_program_id_in_when(tmp_path):
+    make_repo(tmp_path, {"src/repro/kernels/fake/kernel.py": PALLAS_BAD})
+    found = lint(tmp_path, "pallas-hazards")
+    assert any("no lowering rule" in f.message for f in found)
+
+
+def test_pallas_hazards_planted_pid_indexed_subscript(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/kernels/fake/kernel.py": """
+            from jax.experimental import pallas as pl
+
+            def body(scales_ref, o_ref):
+                i = pl.program_id(0)
+
+                @pl.when(i > 0)
+                def _():
+                    o_ref[0] = scales_ref[i]
+        """,
+    })
+    found = lint(tmp_path, "pallas-hazards")
+    assert any("program_id-bound" in f.message for f in found)
+
+
+def test_pallas_hazards_planted_gather(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/kernels/fake/ops.py":
+            "import jax.numpy as jnp\n\n"
+            "def op(kv, idx):\n    return jnp.take(kv, idx, axis=0)\n",
+    })
+    found = lint(tmp_path, "pallas-hazards")
+    assert any("gather-free" in f.message for f in found)
+
+
+def test_pallas_hazards_clean_when_hoisted(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/kernels/fake/kernel.py": """
+            from jax.experimental import pallas as pl
+
+            def body(scales_ref, o_ref):
+                i = pl.program_id(0)
+                s = scales_ref[i]  # hoisted above the cond
+
+                @pl.when(i > 0)
+                def _():
+                    o_ref[0] = s
+        """,
+        # gathers are fine in the oracle
+        "src/repro/kernels/fake/ref.py":
+            "import jax.numpy as jnp\n\n"
+            "def op_ref(kv, idx):\n    return jnp.take(kv, idx, axis=0)\n",
+    })
+    assert lint(tmp_path, "pallas-hazards") == []
+
+
+# --------------------------------------------------------- kernel-contract
+FULL_TRIO = {
+    "src/repro/kernels/foo/__init__.py": "from repro.kernels.foo.ops import foo\n",
+    "src/repro/kernels/foo/kernel.py": "def _body(ref):\n    pass\n",
+    "src/repro/kernels/foo/ops.py": "def foo(x, bm=8):\n    return x\n",
+    "src/repro/kernels/foo/ref.py": "def foo_ref(x):\n    return x\n",
+    "tests/test_foo.py": "from repro.kernels.foo import foo\n"
+                         "from repro.kernels.foo.ref import foo_ref\n",
+}
+
+
+def test_kernel_contract_planted_missing_ref(tmp_path):
+    files = {k: v for k, v in FULL_TRIO.items()
+             if "ref.py" not in k or "tests" in k}
+    make_repo(tmp_path, files)
+    found = lint(tmp_path, "kernel-contract")
+    assert any("missing ['ref.py']" in f.message for f in found)
+
+
+def test_kernel_contract_planted_signature_drift(tmp_path):
+    files = dict(FULL_TRIO)
+    files["src/repro/kernels/foo/ref.py"] = \
+        "def foo_ref(x, scale):\n    return x * scale\n"
+    make_repo(tmp_path, files)
+    found = lint(tmp_path, "kernel-contract")
+    assert any("['scale']" in f.message for f in found)
+
+
+def test_kernel_contract_planted_untested_package(tmp_path):
+    files = {k: v for k, v in FULL_TRIO.items() if "tests" not in k}
+    make_repo(tmp_path, files)
+    found = lint(tmp_path, "kernel-contract")
+    assert any("no module under tests/" in f.message for f in found)
+
+
+def test_kernel_contract_clean(tmp_path):
+    make_repo(tmp_path, FULL_TRIO)
+    assert lint(tmp_path, "kernel-contract") == []
+
+
+# ------------------------------------------------------------ site-grammar
+def test_site_grammar_planted_typo(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/models/routing.py": 'RULES = {"L0.attn.qq": "int8"}\n',
+    })
+    found = lint(tmp_path, "site-grammar")
+    assert [f.line for f in found] == [1]
+    assert "L0.attn.qq" in found[0].message
+
+
+def test_site_grammar_planted_dead_glob(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/models/routing.py": 'DYN = "*.qk|*.pvv"\n',
+    })
+    found = lint(tmp_path, "site-grammar")
+    assert len(found) == 1 and "*.pvv" in found[0].message
+
+
+def test_site_grammar_clean(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/models/routing.py": """
+            CONCRETE = "L31.mlstm.qkv"
+            DYN = "*.qk|*.pv"
+            KV = "L0.kv.k"
+            HEAD = "lm_head"
+            NOT_SITES = ("*.json", "a|b", "some text")
+        """,
+    })
+    assert lint(tmp_path, "site-grammar") == []
+
+
+# ---------------------------------------------------------- config-surface
+SURFACE_CLEAN = {
+    "src/repro/serve/engine.py": "class ServeConfig:\n    max_slots: int = 8\n",
+    "src/repro/serve/frontend.py":
+        "class FrontendConfig:\n    max_queue_depth: int = 4\n",
+    "src/repro/models/transformer.py":
+        "class ModelOptions:\n    plan: str = ''\n    remat: bool = True\n",
+    "src/repro/launch/flags.py": """
+        FIELD_FLAGS = {
+            "ServeConfig.max_slots": "--max-slots",
+            "FrontendConfig.max_queue_depth": "--max-queue",
+            "ModelOptions.plan": "--plan",
+        }
+        INTERNAL_FIELDS = {
+            "ModelOptions.remat": "training-only knob",
+        }
+
+        def add_serve_flags(ap):
+            ap.add_argument("--max-slots", type=int)
+            ap.add_argument("--max-queue", type=int)
+            ap.add_argument("--plan")
+    """,
+    "docs/SERVING.md": "Knobs: max_slots, max_queue_depth, plan.\n",
+}
+
+
+def test_config_surface_clean(tmp_path):
+    make_repo(tmp_path, SURFACE_CLEAN)
+    assert lint(tmp_path, "config-surface") == []
+
+
+def test_config_surface_planted_unmapped_field(tmp_path):
+    files = dict(SURFACE_CLEAN)
+    files["src/repro/serve/engine.py"] = (
+        "class ServeConfig:\n    max_slots: int = 8\n"
+        "    kv_pool_blocks: int = 0\n")
+    make_repo(tmp_path, files)
+    found = lint(tmp_path, "config-surface")
+    assert any("ServeConfig.kv_pool_blocks" in f.message
+               and "neither reachable" in f.message for f in found)
+
+
+def test_config_surface_planted_unregistered_flag(tmp_path):
+    files = dict(SURFACE_CLEAN)
+    files["src/repro/launch/flags.py"] = SURFACE_CLEAN[
+        "src/repro/launch/flags.py"].replace(
+        '            ap.add_argument("--max-slots", type=int)\n', "")
+    make_repo(tmp_path, files)
+    found = lint(tmp_path, "config-surface")
+    assert any("no \nadd_argument" not in f.message
+               and "add_argument('--max-slots'" in f.message.replace('"', "'")
+               for f in found)
+
+
+def test_config_surface_planted_stale_registry_entry(tmp_path):
+    files = dict(SURFACE_CLEAN)
+    files["src/repro/serve/frontend.py"] = \
+        "class FrontendConfig:\n    queue_depth_cap: int = 4\n"
+    make_repo(tmp_path, files)
+    found = lint(tmp_path, "config-surface")
+    assert any("no longer" in f.message for f in found)
+    assert any("FrontendConfig.queue_depth_cap" in f.message for f in found)
+
+
+def test_config_surface_planted_undocumented_field(tmp_path):
+    files = dict(SURFACE_CLEAN)
+    files["docs/SERVING.md"] = "Knobs: max_slots, max_queue_depth.\n"
+    make_repo(tmp_path, files)
+    found = lint(tmp_path, "config-surface")
+    assert any("ModelOptions.plan" in f.message and "document" in f.message
+               for f in found)
+
+
+# ------------------------------------------------------- determinism-gates
+def test_determinism_gates_planted(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/warmup.py": """
+            from repro.serve.prefix_tree import RadixPrefixTree
+
+            def build(block_size):
+                return RadixPrefixTree(block_size)
+        """,
+    })
+    found = lint(tmp_path, "determinism-gates")
+    assert len(found) == 1 and "prefix reuse" in found[0].message
+
+
+def test_determinism_gates_clean_when_gated_or_defining(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/warmup.py": """
+            from repro.serve.engine import _kv_deterministic
+            from repro.serve.prefix_tree import RadixPrefixTree
+
+            def build(model, block_size):
+                if not _kv_deterministic(model):
+                    return None
+                return RadixPrefixTree(block_size)
+        """,
+        # the defining module may exercise its own constructor
+        "src/repro/serve/prefix_tree.py": """
+            class RadixPrefixTree:
+                def __init__(self, block_size):
+                    self.block_size = block_size
+
+            _EMPTY = RadixPrefixTree(1)
+        """,
+    })
+    assert lint(tmp_path, "determinism-gates") == []
+
+
+# ------------------------------------------------------------ suppressions
+def test_line_suppression_silences_one_line(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/hot.py": """
+            import time
+
+            def stamp():
+                return time.time()  # repro-lint: disable=trace-purity -- fixture
+
+            def other():
+                return time.monotonic()
+        """,
+    })
+    found = lint(tmp_path, "trace-purity")
+    assert [f.line for f in found] == [8]  # only the unsuppressed read
+
+
+def test_file_suppression_silences_whole_file(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/hot.py": """
+            # repro-lint: disable=trace-purity -- fixture-wide waiver
+            import time
+
+            def stamp():
+                return time.time()
+        """,
+    })
+    assert lint(tmp_path, "trace-purity") == []
+
+
+def test_strict_polices_suppressions(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/hot.py": """
+            import time
+            T = time.time  # repro-lint: disable=trace-purity
+            U = 1  # repro-lint: disable=not-a-check -- bogus name
+        """,
+    })
+    assert lint(tmp_path, "suppression", strict=False) == []
+    strict = lint(tmp_path, "suppression", strict=True)
+    assert any("without justification" in f.message for f in strict)
+    assert any("unknown check" in f.message for f in strict)
+    # the justified-but-unknown suppression must not hide real findings
+    assert lint(tmp_path, "trace-purity", strict=True) == []
+
+
+# --------------------------------------------------------------------- CLI
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    make_repo(tmp_path, {
+        "src/repro/serve/hot.py": "import time\nT = time.time\n",
+    })
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path), "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert [f["check"] for f in out["findings"]] == ["trace-purity"]
+    assert out["stats"]["counts"] == {"trace-purity": 1}
+
+    (tmp_path / "src/repro/serve/hot.py").write_text("X = 1\n")
+    report = tmp_path / "artifacts" / "lint.json"
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--json-out", str(report)])
+    capsys.readouterr()
+    assert rc == 0
+    assert json.loads(report.read_text())["findings"] == []
+
+
+def test_cli_rejects_unknown_disable_and_paths(tmp_path, capsys):
+    assert cli_main(["--list-checks"]) == 0
+    capsys.readouterr()
+    assert cli_main([str(tmp_path / "nope")]) == 2
+    assert cli_main(["--disable", "bogus", str(tmp_path)]) == 2
+
+
+def test_disable_skips_checker(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/hot.py": "import time\nT = time.time\n",
+    })
+    findings, stats = run_analysis([str(tmp_path / "src")],
+                                   root=str(tmp_path),
+                                   disable=["trace-purity"])
+    assert findings == []
+    assert "trace-purity" not in stats["checkers"]
+
+
+def test_parse_errors_are_findings(tmp_path):
+    make_repo(tmp_path, {"src/repro/serve/broken.py": "def f(:\n"})
+    findings, _ = run_analysis([str(tmp_path / "src")], root=str(tmp_path))
+    assert [f.check for f in findings] == ["parse"]
+
+
+# ---------------------------------------------------------------- meta-test
+def test_real_repo_is_lint_clean_under_strict():
+    """The gate CI enforces: the actual tree lints clean with >= 6 active
+    checkers, so any reintroduced violation fails here first."""
+    findings, stats = run_analysis(
+        [os.path.join(REPO_ROOT, "src")], root=REPO_ROOT, strict=True)
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert len(stats["checkers"]) >= 6

@@ -5,7 +5,7 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.bitstream import (
-    LFSR_ORDER, N_WORDS, STREAM_LEN, encode, encode_signed, pack_bits,
+    LFSR_ORDER, N_WORDS, STREAM_LEN, encode_signed, pack_bits,
     popcount, stream_bits, unpack_bits,
 )
 

@@ -22,7 +22,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _DOC_FILES = [
     os.path.join(ROOT, name)
     for name in ("README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md",
-                 "docs/SERVING.md", "docs/PLANS.md")
+                 "docs/SERVING.md", "docs/PLANS.md", "docs/ANALYSIS.md")
     if os.path.exists(os.path.join(ROOT, name))
 ]
 _PLAN_DOCS = [p for p in _DOC_FILES if p.endswith(("PLANS.md", "README.md"))]

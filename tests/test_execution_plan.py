@@ -25,7 +25,7 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import ARCHS, get_arch
-from repro.core.astra_layer import ComputeConfig, EXACT, INT8, SC
+from repro.core.astra_layer import ComputeConfig, EXACT, INT8
 from repro.core.plan import (
     ExecutionPlan, PRESET_PLANS, model_sites, site_class, validate_site_registry,
 )

@@ -84,8 +84,6 @@ def test_restart_without_checkpoint_restarts_from_scratch(tmp_path):
 
 
 def test_max_restarts_enforced(tmp_path):
-    injector = FaultInjector(())
-
     def bad_step(state, step):
         raise SimulatedFault("always")
 

@@ -7,7 +7,7 @@ from repro.configs import PAPER_MODELS, PAPER_SEQ_LEN, get_arch
 from repro.core.baselines import BASELINES, compare_all, simulate_baseline
 from repro.core.energy import AstraChipConfig
 from repro.core.mapping import MatmulOp, map_matmul
-from repro.core.photonics import PhotonicParams, laser_power_w, vdpe_scalability_table
+from repro.core.photonics import PhotonicParams, vdpe_scalability_table
 from repro.core.simulator import model_ops, simulate
 
 CHIP = AstraChipConfig()

@@ -3,7 +3,6 @@
 Every kernel runs in interpret mode (CPU) and must match its ref.py oracle
 exactly (integer kernels) or to fp tolerance (flash attention).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

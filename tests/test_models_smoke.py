@@ -6,7 +6,6 @@ plus one decode step against a fresh serving state.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable

@@ -1,8 +1,6 @@
 """Optimizer + gradient compression."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.optim import (
     AdamWConfig, CompressorState, adamw_init, adamw_update, compress_init,
@@ -57,7 +55,6 @@ def _psum_sim(fn, *trees, axis="pod", n=2):
 def test_compressed_psum_approximates_mean_reduce(key):
     n = 2
     g = jax.random.normal(key, (n, 64))  # per-pod gradients
-    grads = {"w": g}
     state = compress_init({"w": g[0]})
     states = jax.tree.map(lambda r: jnp.stack([r] * n), state.residual)
 
@@ -74,7 +71,6 @@ def test_compressed_psum_approximates_mean_reduce(key):
 def test_error_feedback_cancels_bias(key):
     """Over repeated steps with a CONSTANT gradient, EF compression's
     cumulative average converges to the true mean reduce (bias -> 0)."""
-    n = 2
     g0 = jax.random.normal(key, (64,)) * 1e-3  # small grads stress quantizer
     g1 = -g0 * 0.5
     g = jnp.stack([g0, g1])

@@ -10,7 +10,6 @@ import itertools
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.ossm import ossm_expected, ossm_multiply, sc_dot, sc_matmul_value

@@ -2,11 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.quant import (
-    MAG_MAX, STREAM_LEN, Calibrator, QTensor, fake_quant, int8_matmul_exact, quantize,
+    MAG_MAX, Calibrator, fake_quant, int8_matmul_exact, quantize,
 )
 
 

@@ -2,10 +2,9 @@
 tests run on 1 CPU device; AbstractMesh carries only the axis geometry).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import AbstractMesh
 
 from repro.configs import get_arch
 from repro.models.model import Model, input_specs
