@@ -27,8 +27,8 @@ import time
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 from benchmarks import (
-    accuracy, decode_attn, energy_breakdown, energy_comparison, kv_quant,
-    pairing_ablation, roofline, serve_throughput, speedup, traffic,
+    accuracy, decode_attn, energy_breakdown, energy_comparison, faults,
+    kv_quant, pairing_ablation, roofline, serve_throughput, speedup, traffic,
     vdpe_scaling,
 )
 
@@ -47,6 +47,7 @@ SECTIONS = {
     "decode_attn": decode_attn.run,         # ISSUE 5: gather-free paged decode
     "traffic": traffic.run_smoke,           # ISSUE 7: SLO-goodput vs load
     "kv_quant": kv_quant.run,               # ISSUE 8: int8 paged KV blocks
+    "faults": faults.run_smoke,             # ISSUE 10: fault isolation/recovery
 }
 
 # the one number per section worth tracking across PRs (key into the
@@ -61,6 +62,7 @@ HEADLINES = {
     "decode_attn": "speedup",
     "traffic": "peak_goodput_rps",
     "kv_quant": "capacity_ratio",
+    "faults": "unaffected_identical_frac",
 }
 
 # allocator/logging environment applied by --tune-env (SNIPPETS.md 1-2

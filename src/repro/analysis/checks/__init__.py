@@ -7,5 +7,6 @@ from repro.analysis.checks import (  # noqa: F401  (imported for registration)
     kernel_contract,
     pallas_hazards,
     site_grammar,
+    swallowed_exceptions,
     trace_purity,
 )

@@ -1,0 +1,86 @@
+"""swallowed-exceptions: no silently discarded failures in fault-bearing code.
+
+The serving and runtime layers are exactly the places that *handle*
+faults on purpose — quarantine, restart, retry — which makes a handler
+that swallows an exception without acting on it doubly dangerous there:
+a ``except Exception: pass`` in the supervisor or the recovery loop
+converts a containment bug into silent corruption (a leaked KV block, a
+half-committed step) that only the ``audit()`` cross-checks might catch
+much later.  This checker bans, under ``src/repro/{serve,runtime}``:
+
+* **bare ``except:``** — always, regardless of body (it catches
+  ``KeyboardInterrupt``/``SystemExit`` too, which nothing here should);
+* **no-op broad handlers** — ``except Exception`` / ``except
+  BaseException`` (directly or inside a tuple) whose body does nothing:
+  only ``pass``, ``...``, bare ``continue``, or docstring-style constant
+  expressions.
+
+A broad handler that *does something* — logs, re-raises, counts,
+restores state — is the legitimate pattern (``run_with_restarts`` treats
+any step failure as recoverable and says so) and is not flagged.
+Intentional narrow swallows of *specific* exception types
+(``except KeyError: pass``) are likewise fine: naming the type is the
+evidence the author thought about what is being discarded.
+
+Suppress (with justification) via the standard mechanism:
+``# repro-lint: disable=swallowed-exceptions -- why``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, RepoContext, SourceFile, checker
+
+SCOPE = ("src/repro/serve/*", "src/repro/runtime/*")
+
+BROAD = {"Exception", "BaseException"}
+
+
+def _names(node: ast.expr) -> Iterator[str]:
+    """Exception-class names mentioned by an ``except`` clause type."""
+    if isinstance(node, ast.Tuple):
+        for elt in node.elts:
+            yield from _names(elt)
+    elif isinstance(node, ast.Name):
+        yield node.id
+    elif isinstance(node, ast.Attribute):
+        yield node.attr  # e.g. builtins.Exception
+
+
+def _is_noop(body) -> bool:
+    """True when a handler body discards the exception without acting:
+    every statement is ``pass``, ``...``/constant expression, or a bare
+    ``continue``."""
+    for stmt in body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+            continue
+        return False
+    return True
+
+
+@checker("swallowed-exceptions", scope=SCOPE)
+def check(sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+    """Ban bare ``except:`` and no-op broad handlers in serve/runtime."""
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            yield Finding(
+                "swallowed-exceptions", sf.rel, node.lineno,
+                "bare 'except:' catches everything including "
+                "KeyboardInterrupt/SystemExit; name the exception types "
+                "this fault path is designed to contain "
+                "(docs/ANALYSIS.md §swallowed-exceptions)")
+            continue
+        if not any(n in BROAD for n in _names(node.type)):
+            continue
+        if _is_noop(node.body):
+            yield Finding(
+                "swallowed-exceptions", sf.rel, node.lineno,
+                "broad exception handler silently discards the failure; "
+                "in fault-bearing code a swallowed error becomes invisible "
+                "corruption — log it, count it, re-raise, or narrow the "
+                "type (docs/ANALYSIS.md §swallowed-exceptions)")

@@ -1,14 +1,16 @@
 """trace-purity: no ambient wall clock or RNG inside traced serving paths.
 
-Everything under ``src/repro/{models,kernels,serve}`` executes inside (or
-feeds) jitted/replayed code: the traffic harness replays whole serving
-runs on a virtual clock, the serve engine's outputs must be a pure
-function of (requests, seed, plan), and prefix reuse replays pooled KV
-verbatim.  A stray ``time.time()`` or ``np.random.*`` call breaks all of
-that invisibly — PR 6 had to hunt down every internal wall-clock read to
-make replay deterministic.  Clocks are injected (``ServeEngine(clock=)``)
-and randomness flows through explicit ``jax.random`` keys or caller-owned
-``numpy`` Generators.
+Everything under ``src/repro/{models,kernels,serve,runtime}`` executes
+inside (or feeds) jitted/replayed code: the traffic harness replays whole
+serving runs on a virtual clock, the serve engine's outputs must be a
+pure function of (requests, seed, plan), prefix reuse replays pooled KV
+verbatim, and the runtime recovery loop (``runtime/fault.py``) must be
+replayable under the same discipline.  A stray ``time.time()`` or
+``np.random.*`` call breaks all of that invisibly — PR 6 had to hunt
+down every internal wall-clock read to make replay deterministic.
+Clocks are injected (``ServeEngine(clock=)``, ``run_with_restarts
+(clock=)``) and randomness flows through explicit ``jax.random`` keys or
+caller-owned ``numpy`` Generators.
 
 The single sanctioned wall-clock entry point is
 ``src/repro/serve/clock.py`` (the injected-clock plumbing), which carries
@@ -21,7 +23,8 @@ from typing import Dict, Iterator, Set
 
 from repro.analysis.core import Finding, RepoContext, SourceFile, checker
 
-SCOPE = ("src/repro/models/*", "src/repro/kernels/*", "src/repro/serve/*")
+SCOPE = ("src/repro/models/*", "src/repro/kernels/*", "src/repro/serve/*",
+         "src/repro/runtime/*")
 
 # module attribute accesses that read ambient time/randomness.  Key: the
 # *real* module name (aliases are resolved from the file's imports);

@@ -38,9 +38,13 @@ FIELD_FLAGS = {
     "ServeConfig.prefill_chunk_tokens": "--prefill-chunk-tokens",
     "ServeConfig.attn_impl": "--attn-impl",
     "ServeConfig.kv_quant": "--kv-quant",
+    "ServeConfig.degraded_mode": "--no-degraded-mode",
     "FrontendConfig.max_queue_depth": "--max-queue",
     "FrontendConfig.queue_timeout_s": "--queue-timeout",
     "FrontendConfig.max_concurrency": "--max-concurrency",
+    "FrontendConfig.default_deadline_s": "--deadline",
+    "FrontendConfig.max_retries": "--max-retries",
+    "FrontendConfig.retry_backoff_s": "--retry-backoff",
     "ModelOptions.plan": "--plan",
     "ModelOptions.attn_impl": "--attn-impl",
     "ModelOptions.kv_quant": "--kv-quant",
@@ -127,6 +131,35 @@ def add_serve_flags(ap: argparse.ArgumentParser) -> None:
                     help="most admitted requests in flight inside the "
                          "engine at once (open-loop replay only); 0 = the "
                          "engine's --max-slots")
+    ap.add_argument("--no-degraded-mode", action="store_true",
+                    help="disable the pool-pressure response ladder "
+                         "(docs/SERVING.md §Fault tolerance); a stalled "
+                         "admission round then wedges loudly instead of "
+                         "flushing the prefix cache / shedding load")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request end-to-end deadline in seconds; "
+                         "waiting requests expire, in-flight ones are "
+                         "cancelled mid-decode (deadline_exceeded); 0 = no "
+                         "deadline (open-loop replay only)")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="retry attempts granted to requests ending in a "
+                         "retryable fault class (docs/SERVING.md §Fault "
+                         "tolerance); 0 = no retry (open-loop replay only)")
+    ap.add_argument("--retry-backoff", type=float, default=0.5,
+                    help="base retry backoff in seconds; attempt k waits "
+                         "min(base * 2^(k-1), 8 * base) on the replay clock "
+                         "(open-loop replay only)")
+    ap.add_argument("--fault-every", type=int, default=0,
+                    help="inject one deterministic fault every N supervisor "
+                         "steps (docs/SERVING.md §Fault tolerance); 0 = no "
+                         "injection (open-loop replay only)")
+    ap.add_argument("--fault-kinds", default="step_error,nonfinite_logits",
+                    help="comma list of fault kinds the injector cycles "
+                         "through: step_error, nonfinite_logits, "
+                         "pool_pressure, slow_step")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the injector's victim-slot choices "
+                         "(deterministic given the seed)")
 
 
 def validate_serve_flags(ap: argparse.ArgumentParser, args) -> None:
@@ -154,6 +187,12 @@ def validate_serve_flags(ap: argparse.ArgumentParser, args) -> None:
             "--no-prefix-cache only applies to the paged KV cache; it is "
             "meaningless with --kv-block-size 0 (dense layout has no "
             "prefix cache to disable)"
+        )
+    if args.no_degraded_mode and args.kv_block_size == 0:
+        ap.error(
+            "--no-degraded-mode only applies to the paged KV cache; the "
+            "dense layout has no block pool, hence no pressure ladder to "
+            "disable"
         )
     if args.prefill_chunk_tokens < 0:
         ap.error(
@@ -187,16 +226,42 @@ def validate_serve_flags(ap: argparse.ArgumentParser, args) -> None:
             "--calibrate so the PTQ pass bakes KV scales into the plan "
             "(docs/SERVING.md §KV quantization)"
         )
-    # ---- open-loop replay flags (FrontendConfig)
+    # ---- open-loop replay flags (FrontendConfig + fault injection)
     if not args.traffic_trace:
-        for flag, val, default in (("--max-queue", args.max_queue, -1),
-                                   ("--queue-timeout", args.queue_timeout, 0.0),
-                                   ("--max-concurrency", args.max_concurrency, 0),
-                                   ("--virtual-step", args.virtual_step, 0.0)):
+        for flag, val, default in (
+                ("--max-queue", args.max_queue, -1),
+                ("--queue-timeout", args.queue_timeout, 0.0),
+                ("--max-concurrency", args.max_concurrency, 0),
+                ("--virtual-step", args.virtual_step, 0.0),
+                ("--deadline", args.deadline, 0.0),
+                ("--max-retries", args.max_retries, 0),
+                ("--retry-backoff", args.retry_backoff, 0.5),
+                ("--fault-every", args.fault_every, 0),
+                ("--fault-kinds", args.fault_kinds,
+                 "step_error,nonfinite_logits"),
+                ("--fault-seed", args.fault_seed, 0)):
             if val != default:
                 ap.error(f"{flag} only applies to open-loop replay; pass "
                          "--traffic-trace <file or spec> to select it")
         return
+    from repro.serve.faults import FAULT_KINDS
+
+    if args.deadline < 0:
+        ap.error(f"--deadline: {args.deadline} is negative; pass an "
+                 "end-to-end deadline in seconds > 0, or 0 to disable")
+    if args.max_retries < 0:
+        ap.error(f"--max-retries: {args.max_retries} is negative; pass the "
+                 "retry attempts granted to retryable faults, or 0 to "
+                 "disable retry")
+    if args.retry_backoff < 0:
+        ap.error(f"--retry-backoff: {args.retry_backoff} is negative; pass "
+                 "a base backoff in seconds >= 0")
+    if args.fault_every < 0:
+        ap.error(f"--fault-every: {args.fault_every} is negative; pass an "
+                 "injection period in supervisor steps, or 0 to disable")
+    check_choices(ap, "--fault-kinds",
+                  [k for k in args.fault_kinds.split(",") if k],
+                  list(FAULT_KINDS))
     if args.max_queue < -1:
         ap.error(f"--max-queue: {args.max_queue} is invalid; pass a queue "
                  "capacity >= 0 (0 = no waiting room) or -1 for unbounded")

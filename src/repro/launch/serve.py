@@ -107,7 +107,7 @@ def generate(model: Model, params, prompts: jax.Array, gen_len: int, max_len: in
         kw = dict(steps=gen_len - 1, sampler=sampler)
         jax.block_until_ready(fused(*args, **kw))  # warm: compile outside t0
         t0 = time.time()
-        toks, _ = fused(*args, **kw)
+        toks, _, _ = fused(*args, **kw)
         jax.block_until_ready(toks)
         # count only the steps inside the timed window (the first token
         # came from prefill, before t0)
@@ -185,7 +185,9 @@ def _load_trace(ap: argparse.ArgumentParser, spec: str, cfg):
 
 def _run_traffic(model, params, trace, args, sampler):
     """Open-loop replay: admission front-end + SLO scorecard."""
-    from repro.serve import FrontendConfig, ServeFrontend
+    from repro.serve import (
+        EngineSupervisor, FrontendConfig, ServeFaultInjector, ServeFrontend,
+    )
     from repro.traffic import SLOConfig, VirtualClock, evaluate, replay_trace, trace_max_len
 
     block = args.kv_block_size
@@ -198,25 +200,41 @@ def _run_traffic(model, params, trace, args, sampler):
         kv_block_size=block, kv_pool_blocks=args.kv_pool_blocks,
         prefix_cache=not args.no_prefix_cache,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
-        attn_impl=args.attn_impl, kv_quant=args.kv_quant)
+        attn_impl=args.attn_impl, kv_quant=args.kv_quant,
+        degraded_mode=not args.no_degraded_mode)
     fe_cfg = FrontendConfig(
         max_queue_depth=None if args.max_queue < 0 else args.max_queue,
         queue_timeout_s=args.queue_timeout or None,
-        max_concurrency=args.max_concurrency or None)
+        max_concurrency=args.max_concurrency or None,
+        default_deadline_s=args.deadline or None,
+        max_retries=args.max_retries,
+        retry_backoff_s=args.retry_backoff)
     virtual = args.virtual_step > 0
 
-    def stack(force_virtual=False):
+    def stack(force_virtual=False, inject=False):
         clk = VirtualClock() if (virtual or force_virtual) else None
         eng = ServeEngine(model, params, serve_cfg, chip=AstraChipConfig(),
                           clock=clk)
-        return ServeFrontend(eng, fe_cfg, clock=clk)
+        sup = None
+        if inject and args.fault_every > 0:
+            # generous horizon: the schedule just needs to outlast the run
+            inj = ServeFaultInjector.periodic(
+                n_steps=100 * max(len(trace), 1) + args.fault_every,
+                every=args.fault_every,
+                kinds=[k for k in args.fault_kinds.split(",") if k],
+                seed=args.fault_seed)
+            sup = EngineSupervisor(eng, inj)
+        elif args.fault_every > 0 or args.max_retries > 0 or args.deadline:
+            sup = EngineSupervisor(eng)  # containment + audit, no injection
+        return ServeFrontend(eng, fe_cfg, clock=clk, supervisor=sup)
 
-    # warm pass on a throwaway stack in virtual time (no sleeps): the
-    # jitted programs are memoized per model, so the replay below
-    # measures serving, not XLA compilation
+    # warm pass on a throwaway stack in virtual time (no sleeps, no
+    # faults): the jitted programs are memoized per model, so the replay
+    # below measures serving, not XLA compilation
     replay_trace(stack(force_virtual=True), trace,
                  virtual_step_s=args.virtual_step or 0.05)
-    result = replay_trace(stack(), trace,
+    frontend = stack(inject=True)
+    result = replay_trace(frontend, trace,
                           virtual_step_s=args.virtual_step if virtual else None)
     slo = (SLOConfig(args.slo_ttft, args.slo_itl)
            if args.slo_ttft > 0 and args.slo_itl > 0 else None)
@@ -243,6 +261,17 @@ def _run_traffic(model, params, trace, args, sampler):
         print(f"  SLO (ttft<={slo.ttft_s}s, itl<={slo.itl_s}s): "
               f"{m['n_slo_met']}/{m['n_offered']} met "
               f"({m['slo_attainment']:.0%}), goodput {m['goodput_rps']:.2f} rps")
+    if frontend.supervisor is not None:
+        sup_st = frontend.supervisor.stats
+        eng_st = frontend.engine.stats()
+        print(f"  faults: {sup_st['faults_injected']} injected over "
+              f"{sup_st['steps']} supervised steps, "
+              f"{eng_st['n_quarantined']} quarantined / "
+              f"{eng_st['n_cancelled']} cancelled / {eng_st['n_shed']} shed, "
+              f"{st['retries']} retries, {sup_st['audits_run']} audits clean")
+        if eng_st["degraded_transitions"]:
+            path = " -> ".join(name for _, name in eng_st["degraded_transitions"])
+            print(f"  degraded ladder: {path} (now {eng_st['degraded_level']})")
     return result.outputs
 
 

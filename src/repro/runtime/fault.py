@@ -16,8 +16,9 @@ state machine a multi-controller launcher runs per slice):
 from __future__ import annotations
 
 import logging
-import time
 from typing import Any, Callable, Dict, Iterable, Optional, Set, Tuple
+
+from repro.serve.clock import resolve_clock
 
 log = logging.getLogger("repro.runtime")
 
@@ -48,6 +49,7 @@ def run_with_restarts(
     restore_fn: Optional[Callable[[int, Any], Any]] = None,
     max_restarts: int = 10,
     on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    clock: Optional[Callable[[], float]] = None,
 ) -> Dict[str, Any]:
     """Run ``n_steps`` of ``step_fn`` with checkpoint/restart recovery.
 
@@ -55,8 +57,14 @@ def run_with_restarts(
     the newest checkpoint (via ``restore_fn(step, state_template)`` if
     given, else ``ckpt_manager.restore``) and replays from there.  Returns
     summary: final state, per-step metrics, restart count, wall time.
+
+    ``clock`` follows the serving stack's injected-clock discipline
+    (``repro.serve.clock``): ``wall_s`` is measured on it, so tests can
+    run the whole recovery loop on a virtual clock.  ``None`` uses the
+    sanctioned ambient wall clock.
     """
-    t0 = time.time()
+    clock = resolve_clock(clock)
+    t0 = clock()
     state = init_state()
     start = 0
     if ckpt_manager is not None:
@@ -96,7 +104,7 @@ def run_with_restarts(
         "state": state,
         "metrics": metrics_hist,
         "restarts": restarts,
-        "wall_s": time.time() - t0,
+        "wall_s": clock() - t0,
     }
 
 

@@ -28,11 +28,24 @@ Public surface:
   (docs/SERVING.md §Traffic, SLOs, and backpressure): bounded admission
   queue, queue-timeout / queue-full load shedding with visible
   ``reject_reason``, per-token streaming over the engine's incremental
-  drain path.  Driven at load by :mod:`repro.traffic`.
+  drain path.  Driven at load by :mod:`repro.traffic`.  Grown with
+  per-request deadlines, client cancellation, and capped-backoff retry
+  of retryable fault classes (docs/SERVING.md §Fault tolerance).
+* :class:`~repro.serve.faults.ServeFaultInjector` /
+  :class:`~repro.serve.faults.FaultSpec` /
+  :class:`~repro.serve.supervisor.EngineSupervisor` — deterministic
+  fault injection and the containment layer that quarantines only the
+  faulted request (``RequestOutput.fault_reason``), releases its KV
+  blocks, and keeps every other stream bit-identical to a fault-free
+  replay, with a refcount/bytes ``audit()`` each step.
 """
 from repro.serve.accounting import RequestTiming
 from repro.serve.decode_loop import make_fused_decode, unfused_decode
 from repro.serve.engine import Request, RequestOutput, ServeConfig, ServeEngine
+from repro.serve.faults import (
+    CANCELLED, DEADLINE_EXCEEDED, FAULT_KINDS, RETRYABLE_FAULTS, FaultSpec,
+    InjectedStepError, NonFiniteLogitsError, ServeFault, ServeFaultInjector,
+)
 from repro.serve.frontend import (
     REJECT_QUEUE_FULL, REJECT_QUEUE_TIMEOUT, FrontendConfig, ServeFrontend,
     TokenStream,
@@ -44,19 +57,31 @@ from repro.serve.prefill import (
 )
 from repro.serve.prefix_tree import RadixPrefixTree
 from repro.serve.sampling import GREEDY, SamplerConfig
-from repro.serve.scheduler import SchedulerConfig, TokenBudgetScheduler
+from repro.serve.scheduler import DegradedLadder, SchedulerConfig, TokenBudgetScheduler
 from repro.serve.slots import SlotState
+from repro.serve.supervisor import EngineSupervisor
 
 __all__ = [
+    "CANCELLED",
+    "DEADLINE_EXCEEDED",
+    "DegradedLadder",
+    "EngineSupervisor",
+    "FAULT_KINDS",
+    "FaultSpec",
     "GREEDY",
     "FrontendConfig",
+    "InjectedStepError",
     "KVBlockPool",
+    "NonFiniteLogitsError",
     "REJECT_QUEUE_FULL",
     "REJECT_QUEUE_TIMEOUT",
+    "RETRYABLE_FAULTS",
     "RadixPrefixTree",
     "Request",
     "RequestOutput",
     "RequestTiming",
+    "ServeFault",
+    "ServeFaultInjector",
     "ServeFrontend",
     "TokenStream",
     "SamplerConfig",

@@ -8,6 +8,12 @@ decode->sample->feed-back loop is a ``jax.lax.scan`` body, so a chunk of
 
 Positions are per-slot (``pos [B]``): the continuous-batching engine runs
 slots at different absolute positions in the same fused chunk.
+
+Every chunk also returns a per-slot *finite* flag — ``True`` iff every
+logit the slot produced across the chunk was finite — so NaN poisoning
+(organic analog noise or an injected ``nonfinite_logits`` fault) is
+detected at the step it happens and attributed to the right slot
+(docs/SERVING.md §Fault tolerance).
 """
 from __future__ import annotations
 
@@ -19,14 +25,21 @@ import jax.numpy as jnp
 
 from repro.models.model import Model
 from repro.serve.sampling import SamplerConfig, sample_next_token
-from repro.serve.slots import select_states
+from repro.serve.slots import finite_mask, select_states
+
+
+def _poisoned(logits, poison):
+    """NaN out the logits of slots flagged in ``poison`` ([B] bool)."""
+    shape = (-1,) + (1,) * (logits.ndim - 1)
+    return jnp.where(poison.reshape(shape), jnp.nan, logits)
 
 
 @functools.lru_cache(maxsize=64)
 def make_fused_decode(model: Model):
     """Build a jitted ``(params, tok, states, pos, key, steps, sampler)`` fn.
 
-    Returns tokens ``[B, steps]`` (or ``[B, C, steps]``), plus the carried
+    Returns tokens ``[B, steps]`` (or ``[B, C, steps]``), a per-slot
+    ``finite [B]`` bool (ANDed across the chunk's steps), plus the carried
     (next_tok, states, pos, key).  ``steps`` and ``sampler`` are static:
     each distinct chunk length compiles once and is cached by jit.
     Memoized per (hashable, frozen) ``Model`` so every engine instance over
@@ -39,24 +52,35 @@ def make_fused_decode(model: Model):
     state or KV.  (Paged layouts don't need it: a prefilling slot's block
     table points at the scratch block until it starts decoding.)  With
     ``active=None`` the program is unchanged from the maskless build.
+
+    ``poison`` (optional ``[B]`` bool) injects NaN into the flagged
+    slots' logits inside the scan — the fault-injection stand-in for
+    analog noise (serve/faults.py).  ``poison=None`` adds nothing to the
+    traced program beyond the finite reduction itself.
     """
 
     def fused(params, tok, states, pos, key, steps: int, sampler: SamplerConfig,
-              tables=None, active=None):
+              tables=None, active=None, poison=None):
         def step(carry, _):
-            tok, states, pos, key = carry
+            tok, states, pos, key, finite = carry
             logits, new_states = model.decode(params, tok, states, pos,
                                               block_tables=tables)
+            if poison is not None:
+                logits = _poisoned(logits, poison)
+            finite = finite & finite_mask(logits)
             states = (new_states if active is None
                       else select_states(new_states, states, active))
             key, sub = jax.random.split(key)
             nxt = sample_next_token(logits, sampler, sub, model.cfg)
-            return (nxt, states, pos + 1, key), nxt
+            return (nxt, states, pos + 1, key, finite), nxt
 
-        carry, toks = jax.lax.scan(step, (tok, states, pos, key), length=steps)
+        finite0 = jnp.ones(tok.shape[0], dtype=bool)
+        carry, toks = jax.lax.scan(step, (tok, states, pos, key, finite0),
+                                   length=steps)
+        tok, states, pos, key, finite = carry
         # toks [steps, B, 1] | [steps, B, C, 1] -> [B, steps] | [B, C, steps]
         toks = jnp.moveaxis(toks[..., 0], 0, -1)
-        return toks, carry
+        return toks, finite, (tok, states, pos, key)
 
     return jax.jit(fused, static_argnames=("steps", "sampler"))
 
@@ -69,19 +93,24 @@ def _jitted_decode(model: Model):
 
 
 def unfused_decode(model: Model, params, tok, states, pos, key, steps: int,
-                   sampler: SamplerConfig, tables=None,
-                   active=None) -> Tuple[jax.Array, tuple]:
+                   sampler: SamplerConfig, tables=None, active=None,
+                   poison=None) -> Tuple[jax.Array, jax.Array, tuple]:
     """Seed-style reference loop: one ``jit(decode)`` dispatch per token.
 
     Kept as the parity oracle for the fused scan (and as the benchmark
-    baseline the fused loop is measured against).  ``active`` mirrors the
-    fused loop's optional per-slot state gate.
+    baseline the fused loop is measured against).  ``active`` and
+    ``poison`` mirror the fused loop's optional per-slot gates; the
+    return layout matches too: ``(toks, finite, carry)``.
     """
     decode = _jitted_decode(model)
     out = []
     pos = jnp.asarray(pos, jnp.int32)
+    finite = jnp.ones(tok.shape[0], dtype=bool)
     for _ in range(steps):
         logits, new_states = decode(params, tok, states, pos, tables)
+        if poison is not None:
+            logits = _poisoned(logits, poison)
+        finite = finite & finite_mask(logits)
         states = (new_states if active is None
                   else select_states(new_states, states, active))
         key, sub = jax.random.split(key)
@@ -92,4 +121,4 @@ def unfused_decode(model: Model, params, tok, states, pos, key, steps: int,
     toks = jnp.concatenate(out, axis=-1) if out else jnp.zeros(
         tok.shape[:-1] + (0,), jnp.int32
     )
-    return toks, (tok, states, pos, key)
+    return toks, finite, (tok, states, pos, key)

@@ -69,13 +69,19 @@ from repro.serve.accounting import (
     RequestHardwareReport, RequestTiming, request_hardware_report, request_timing,
 )
 from repro.serve.decode_loop import make_fused_decode
+from repro.serve.faults import (
+    CANCEL_CLASS, CANCELLED, FAULT_NONFINITE, FAULT_POOL_PRESSURE,
+    FAULT_STEP_ERROR, FaultSpec, InjectedStepError, NonFiniteLogitsError,
+)
 from repro.serve.kv_pool import KVBlockPool
 from repro.serve.prefill import (
     pack_prompts, packed_prefill, prefill_paged_suffix, prefill_window,
 )
 from repro.serve.prefix_tree import RadixPrefixTree
 from repro.serve.sampling import GREEDY, SamplerConfig, sample_next_token
-from repro.serve.scheduler import SchedulerConfig, TokenBudgetScheduler, pow2_bucket
+from repro.serve.scheduler import (
+    DegradedLadder, SchedulerConfig, TokenBudgetScheduler, pow2_bucket,
+)
 from repro.serve.slots import SlotState, paged_scatter_states, scatter_states
 
 _paged_scatter = jax.jit(paged_scatter_states)
@@ -115,6 +121,12 @@ class ServeConfig:
     # engine raises ValueError otherwise instead of silently degrading).
     # None inherits ModelOptions.kv_quant; a string overrides it.
     kv_quant: Optional[str] = None
+    # degraded-mode ladder (docs/SERVING.md §Fault tolerance): on repeated
+    # paged-admission pool pressure the engine flushes the prefix tree,
+    # then disables prefix admission, then sheds the queue head as a
+    # terminal "pool_pressure" fault output.  False restores the old
+    # fail-loud behaviour (RuntimeError when wedged).
+    degraded_mode: bool = True
 
 
 @dataclasses.dataclass
@@ -144,6 +156,12 @@ class RequestOutput:
     # Rejected requests still get this terminal output — they never
     # silently vanish — with empty tokens and queue-wait-only timing.
     reject_reason: Optional[str] = None
+    # set when the request was terminated by the fault layer instead of
+    # completing: a fault class from serve/faults.py ("step_error" |
+    # "nonfinite_logits" | "pool_pressure") or a client-intent reason
+    # ("cancelled" | "deadline_exceeded").  ``tokens`` holds whatever was
+    # generated (and streamed) before termination.
+    fault_reason: Optional[str] = None
 
     @property
     def gen_len(self) -> int:
@@ -252,7 +270,7 @@ def _pool_bytes_per_block(states) -> int:
 
 
 class ServeEngine:
-    def __init__(self, model: Model, params, config: ServeConfig = ServeConfig(),
+    def __init__(self, model: Model, params, config: Optional[ServeConfig] = None,
                  chip: Optional[AstraChipConfig] = None, plan=None,
                  clock: Optional[Callable[[], float]] = None,
                  token_sink: Optional[Callable[[int, np.ndarray], None]] = None):
@@ -273,6 +291,10 @@ class ServeEngine:
         Finished outputs still flow through the ``run()``/``step()`` outbox
         exactly once; the sink only adds early visibility.
         """
+        # None sentinel, not a default instance: a module-level default
+        # would be one shared (frozen, but identity-bearing) object across
+        # every engine — the B006 discipline the lint baseline enforces
+        config = ServeConfig() if config is None else config
         if plan is not None:
             model = model.with_plan(plan)
         if (config.attn_impl is not None
@@ -315,6 +337,11 @@ class ServeEngine:
         self._outbox: List[RequestOutput] = []  # finished, not yet collected
         self._next_id = 0
         self._key = jax.random.PRNGKey(config.seed)
+        # ---------------------------------------------- fault containment
+        self._step_no = 0  # engine rounds run (fault/ladder attribution)
+        self._n_quarantined = 0  # slots terminated by quarantine_slot
+        self._n_cancelled = 0    # requests ended by cancel/deadline
+        self._n_shed = 0         # queue heads shed by the degraded ladder
         # prefix reuse / chunked paged prefill need every stateful layer's
         # state to be reconstructible from pooled blocks -> pure global attn
         self._suffix_path = all(k == "attn" for k in cfg.layer_kinds)
@@ -371,6 +398,13 @@ class ServeEngine:
             self._pool.bytes_per_block = _pool_bytes_per_block(self._states)
         else:
             self._states = model.init_decode_state(config.max_slots, config.max_len)
+        # degraded-mode ladder: pool pressure is a paged-only phenomenon
+        # (dense layouts have no pool to squeeze), and only meaningful
+        # when the operator hasn't opted back into fail-loud wedging
+        self._ladder: Optional[DegradedLadder] = (
+            DegradedLadder() if (self._paged and config.degraded_mode) else None)
+        self._prefix_admission = True  # ladder level 2 turns this off
+        self._admit_progress = False   # >=1 request left the queue this round
         # --------------------------------------------- prefill scheduling
         self._sched: Optional[TokenBudgetScheduler] = None
         self._prefilling: List[int] = []  # PREFILLING slot ids, admission order
@@ -464,13 +498,24 @@ class ServeEngine:
             outs.extend(self.step())
         return sorted(outs, key=lambda o: o.request_id)
 
-    def step(self) -> List[RequestOutput]:
+    def step(self, faults: Optional[Sequence[FaultSpec]] = None) -> List[RequestOutput]:
         """Admit + prefill work + one fused chunk.  Drains and returns the
-        requests that finished since the last collection."""
+        requests that finished since the last collection.
+
+        ``faults`` (normally passed by :class:`~repro.serve.supervisor.
+        EngineSupervisor`) injects decode faults into this round's chunk:
+        a ``step_error`` raises :class:`InjectedStepError` *before* any
+        state commit, a ``nonfinite_logits`` poisons the victim slot's
+        logits inside the fused scan.  Either way the raised
+        :class:`~repro.serve.faults.ServeFault` names the implicated
+        slots and every other slot's stream stays bit-identical to a
+        fault-free replay; without a supervisor the fault propagates to
+        the caller (loud by design)."""
+        self._step_no += 1
         self._admit()
         if self._sched is not None:
             self._prefill_chunk()
-        self._decode_chunk()
+        self._decode_chunk(faults)
         self._check_progress()
         return self._drain()
 
@@ -479,10 +524,20 @@ class ServeEngine:
         return outs
 
     def _check_progress(self):
-        """Fail loudly instead of spinning when paged admission can never
-        succeed (possible only when pool invariants were broken externally
-        — the construction-time floor makes organic admission infallible)."""
-        if (self._admit_stalled and self._queue
+        """React to a stalled paged-admission round.
+
+        With ``degraded_mode`` (default) the engine walks the
+        :class:`~repro.serve.scheduler.DegradedLadder` — flush the prefix
+        tree, then stop prefix admission, then shed the queue head as a
+        terminal ``pool_pressure`` fault output — and relaxes one level
+        per round with admission progress.  With ``degraded_mode=False``
+        it keeps the original fail-loud contract: raise when admission
+        can never succeed (possible only when pool invariants were broken
+        externally — the construction-time floor makes organic admission
+        infallible)."""
+        if self._admit_stalled and self._ladder is not None:
+            self._degrade()
+        elif (self._admit_stalled and self._queue
                 and not any(s is not None for s in self._slots)):
             raise RuntimeError(
                 "serve engine wedged: paged admission failed with every slot "
@@ -490,7 +545,29 @@ class ServeEngine:
                 f"({len(self._queue)} request(s) queued, "
                 f"{self._pool.n_free} pool blocks free)"
             )
+        elif self._admit_progress and self._ladder is not None:
+            if self._ladder.relax(self._step_no) == DegradedLadder.NORMAL:
+                self._prefix_admission = True
         self._admit_stalled = False
+        self._admit_progress = False
+
+    def _degrade(self):
+        """One stalled round: escalate the ladder and act at its level."""
+        level = self._ladder.escalate(self._step_no)
+        if level >= DegradedLadder.FLUSH_PREFIX and self._prefix is not None:
+            # free every evictable interned block — cache value traded
+            # for admission headroom, hits become recomputes, not faults
+            self._prefix.evict(self._pool.n_blocks, self._pool)
+        if level >= DegradedLadder.NO_PREFIX_ADMISSION:
+            self._prefix_admission = False
+        if level >= DegradedLadder.SHED_LOAD and self._queue:
+            # bounded: one queue head per stalled round becomes a terminal
+            # pool_pressure fault output (retryable once pressure clears)
+            req = self._queue.popleft()
+            now = self.clock()
+            self._complete(req, [], t_admit=now, t_first=now, events=[],
+                           fault_reason=FAULT_POOL_PRESSURE)
+            self._n_shed += 1
 
     # ------------------------------------------------------------- admit
     def _admit(self):
@@ -498,10 +575,13 @@ class ServeEngine:
         n = min(len(free), len(self._queue))
         if n == 0:
             return
+        before = len(self._queue)
         if self._sched is not None:
             self._admit_chunked(free[:n])
         else:
             self._admit_blocking(free[:n])
+        if len(self._queue) < before:
+            self._admit_progress = True
 
     def _reserve_blocks(self, req: Request) -> Tuple[List[int], int]:
         """Match + incref prefix blocks and allocate the rest for ``req``.
@@ -516,7 +596,7 @@ class ServeEngine:
         bs = self._block_size
         total = -(-(req.prompt_len + req.max_new_tokens) // bs)
         matched: List[int] = []
-        if self._prefix is not None:
+        if self._prefix is not None and self._prefix_admission:
             # always leave >= 1 suffix token: the last prompt token's
             # logits seed the first sampled token
             matched = self._prefix.match(
@@ -641,6 +721,8 @@ class ServeEngine:
         return adm_slots, adm_reqs, last_logits, starts
 
     def _intern_prompt(self, slot_i: int, req: Request, start: int):
+        if not self._prefix_admission:  # ladder level 2+: no new interning
+            return
         bs = self._block_size
         nb_full = req.prompt_len // bs
         if nb_full > start // bs:
@@ -825,12 +907,212 @@ class ServeEngine:
             self._tables_dirty = False
         return BlockTables(self._tables_dev, jnp.int32(self._ring_len))
 
+    # -------------------------------------------------- fault containment
+    def quarantine_slot(self, slot_i: int, reason: str,
+                        scrub: bool = True) -> None:
+        """Terminate the request occupying ``slot_i`` as a terminal fault.
+
+        The request's already-generated tokens become its final output
+        (``fault_reason=reason`` — the streamed chunks and the output
+        tokens stay equal, exactly like a normal retire), its exclusively
+        held pool blocks are scrubbed (NaN containment: attention masks
+        *scores*, not values, so ``0 * NaN`` would poison a future owner's
+        output) and released, and the slot is freed.  No other slot is
+        touched — that is the whole point.
+        """
+        slot = self._slots[slot_i]
+        if slot is None:
+            raise ValueError(f"quarantine of empty slot {slot_i}")
+        if slot.state is SlotState.PREFILLING:
+            self._prefilling.remove(slot_i)
+        gen = (np.concatenate(slot.generated, axis=-1)
+               if slot.generated else [])
+        now = self.clock()
+        self._complete(slot.req, gen, slot.t_admit or now,
+                       slot.t_first or slot.t_admit or now, slot.events,
+                       cached=slot.cached, fault_reason=reason)
+        if scrub and self._paged:
+            # only blocks nobody else holds: shared (interned) blocks are
+            # prompt prefill output — deterministic and never written by
+            # this slot's decode, so they cannot carry its poison
+            self._scrub_blocks([b for b in self._slot_blocks[slot_i]
+                                if self._pool.ref(b) == 1])
+        self._release_blocks(slot_i)
+        self._slots[slot_i] = None
+        if reason in CANCEL_CLASS:
+            self._n_cancelled += 1
+        else:
+            self._n_quarantined += 1
+
+    def _scrub_blocks(self, blocks: List[int]) -> None:
+        """Zero the given physical blocks in every layer's K/V pools.
+
+        Dense layouts need no analogue: admission fully overwrites a
+        slot's state before it is ever read (``scatter_states``), and the
+        finite guard only inspects active slots.
+        """
+        if not blocks:
+            return
+        from repro.models.attention import PagedKVCache, QuantPagedKVCache
+
+        idx = jnp.asarray(blocks, jnp.int32)
+
+        def scrub(node):
+            if isinstance(node, (PagedKVCache, QuantPagedKVCache)):
+                def z(arr):
+                    # units pools [U, n_blocks, kv, bs, hd]; rem [n_blocks, ...]
+                    return (arr.at[:, idx].set(0) if arr.ndim == 5
+                            else arr.at[idx].set(0))
+                return node._replace(k=z(node.k), v=z(node.v))
+            return node
+
+        self._states = jax.tree.map(
+            scrub, self._states,
+            is_leaf=lambda x: isinstance(x, (PagedKVCache, QuantPagedKVCache)),
+        )
+
+    def cancel(self, request_id: int, reason: str = CANCELLED) -> bool:
+        """Terminate a queued or in-flight request (client intent).
+
+        Mid-decode cancellation goes through :meth:`quarantine_slot`, so
+        the request's KV blocks are released immediately — freeing pool
+        capacity is the point of cancelling.  The terminal output (tokens
+        generated so far, ``fault_reason=reason``) flows through the
+        normal outbox.  Returns False when the id is not queued or
+        in-flight (already finished, or never seen).
+        """
+        for j, req in enumerate(self._queue):
+            if req.id == request_id:
+                del self._queue[j]
+                now = self.clock()
+                self._complete(req, [], t_admit=now, t_first=now, events=[],
+                               fault_reason=reason)
+                self._n_cancelled += 1
+                return True
+        for i, slot in enumerate(self._slots):
+            if slot is not None and slot.req.id == request_id:
+                # client-intent termination never poisoned anything — the
+                # slot decoded finite tokens until now — so skip the scrub
+                self.quarantine_slot(i, reason, scrub=False)
+                return True
+        return False
+
+    def audit(self, external_refs: Sequence[int] = ()) -> Dict[str, object]:
+        """Cross-check every piece of serving bookkeeping; raise on drift.
+
+        Verifies (a) outbox/queue/slot request-id disjointness and
+        exactly-once outbox discipline, (b) the PREFILLING list against
+        slot states, and — on paged layouts — (c) every block's refcount
+        against its actual holders (slot tables + prefix tree +
+        ``external_refs``, e.g. a supervisor's pool-pressure holds),
+        (d) pool free-list consistency, and (e) device block-table rows
+        against host slot state.  Raises ``RuntimeError`` on the first
+        violation; returns a report dict (``leaked_blocks``/``leaked_bytes``
+        are always 0 when it returns) for tests and stats.
+        """
+        out_ids = [o.request_id for o in self._outbox]
+        if len(set(out_ids)) != len(out_ids):
+            raise RuntimeError(
+                f"audit: duplicate request ids in outbox ({out_ids})")
+        live_ids = {s.req.id for s in self._slots if s is not None}
+        live_ids |= {r.id for r in self._queue}
+        stale = set(out_ids) & live_ids
+        if stale:
+            raise RuntimeError(
+                f"audit: request id(s) {sorted(stale)} are simultaneously "
+                "finished (outbox) and live (queue/slot)")
+        for i in self._prefilling:
+            s = self._slots[i]
+            if s is None or s.state is not SlotState.PREFILLING:
+                raise RuntimeError(
+                    f"audit: prefilling list names slot {i} but the slot "
+                    f"is {'empty' if s is None else s.state}")
+        report: Dict[str, object] = {
+            "paged": self._paged,
+            "slots_live": sum(s is not None for s in self._slots),
+            "queued": len(self._queue),
+            "outbox": len(out_ids),
+            "leaked_blocks": 0,
+            "leaked_bytes": 0,
+        }
+        if not self._paged:
+            return report
+        self._pool.check_consistent()
+        expected: Dict[int, int] = {}
+        for blocks in self._slot_blocks:
+            for b in blocks:
+                expected[b] = expected.get(b, 0) + 1
+        tree_blocks = (self._prefix.interned_blocks()
+                       if self._prefix is not None else [])
+        for b in tree_blocks:
+            expected[b] = expected.get(b, 0) + 1
+        for b in external_refs:
+            expected[b] = expected.get(b, 0) + 1
+        drift = [(b, self._pool.ref(b), expected.get(b, 0))
+                 for b in range(1, self._pool.n_blocks)
+                 if self._pool.ref(b) != expected.get(b, 0)]
+        if drift:
+            b, have, want = drift[0]
+            raise RuntimeError(
+                f"audit: {len(drift)} block(s) with refcount drift — e.g. "
+                f"block {b}: pool ref {have} vs {want} actual holder(s) "
+                "(slot tables + prefix tree + external refs)")
+        for i, slot in enumerate(self._slots):
+            row = self._tables_np[i]
+            blocks = self._slot_blocks[i]
+            if slot is None and blocks:
+                raise RuntimeError(
+                    f"audit: empty slot {i} still holds blocks {blocks}")
+            if slot is None or slot.state is SlotState.PREFILLING:
+                if row.any():
+                    raise RuntimeError(
+                        f"audit: slot {i} "
+                        f"({'empty' if slot is None else 'PREFILLING'}) has "
+                        "a non-scratch device table row — ride-along decode "
+                        "writes could corrupt another slot's blocks")
+            else:
+                want_row = np.zeros_like(row)
+                want_row[: len(blocks)] = blocks
+                if not np.array_equal(row, want_row):
+                    raise RuntimeError(
+                        f"audit: slot {i} device table row {row.tolist()} "
+                        f"!= host blocks {blocks}")
+        report.update(
+            pool_blocks=self._pool.n_blocks, live_blocks=self._pool.n_live,
+            free_blocks=self._pool.n_free, tree_blocks=len(tree_blocks),
+            external_refs=len(list(external_refs)),
+        )
+        return report
+
     # ------------------------------------------------------------- chunk
-    def _decode_chunk(self):
+    @staticmethod
+    def _resolve_victim(hint: Optional[int], active: List[int]) -> int:
+        """Map a FaultSpec slot *hint* onto a slot active this round, so
+        seeded schedules stay meaningful whatever the admission pattern."""
+        return active[0] if hint is None else active[hint % len(active)]
+
+    def _decode_chunk(self, faults: Optional[Sequence[FaultSpec]] = None):
         active = [i for i, s in enumerate(self._slots)
                   if s is not None and s.state is SlotState.DECODING]
         if not active:
             return
+        for spec in (faults or ()):
+            if spec.kind == FAULT_STEP_ERROR:
+                # whole-dispatch failure, raised BEFORE any state commit:
+                # healthy slots simply skip one chunk (under greedy
+                # sampling their token streams are chunk-boundary
+                # independent, so they stay bit-identical)
+                victim = self._resolve_victim(spec.slot, active)
+                raise InjectedStepError(
+                    f"injected device error at engine step {self._step_no} "
+                    f"(slot {victim})", slots=(victim,))
+        poison = None
+        poisoned = sorted({self._resolve_victim(s.slot, active)
+                           for s in (faults or ()) if s.kind == FAULT_NONFINITE})
+        if poisoned:
+            p = np.zeros(self.config.max_slots, bool)
+            p[poisoned] = True
+            poison = jnp.asarray(p)
         steps = min(self.config.chunk_steps,
                     min(self._slots[i].remaining for i in active))
         pos = np.zeros(self.config.max_slots, np.int32)
@@ -845,17 +1127,24 @@ class ServeEngine:
             m[active] = True
             mask = jnp.asarray(m)
         self._key, sub = jax.random.split(self._key)
-        toks, (next_tok, states, _, _) = self._fused(
+        toks, finite, (next_tok, states, _, _) = self._fused(
             self.params, self._cur_tok, self._states, jnp.asarray(pos), sub,
             steps=steps, sampler=self.config.sampler,
             tables=self._block_tables() if self._paged else None,
-            active=mask,
+            active=mask, poison=poison,
         )
         self._states = states
         self._cur_tok = next_tok
         toks_np = np.asarray(toks)  # [B, steps] or [B, C, steps]
+        finite_np = np.asarray(finite)  # [B] bool, ANDed over the chunk
+        bad = [i for i in active if not finite_np[i]]
         t_now = self.clock()
         for i in active:
+            if i in bad:
+                # the slot's tokens this chunk are garbage (sampled from
+                # non-finite logits): don't emit or account them — the
+                # request ends at its pre-fault stream via quarantine
+                continue
             slot = self._slots[i]
             slot.generated.append(toks_np[i])
             slot.events.append((t_now, steps))
@@ -866,6 +1155,12 @@ class ServeEngine:
                 self._retire(slot)
                 self._release_blocks(i)
                 self._slots[i] = None
+        if bad:
+            # healthy slots are fully committed above; the fault names
+            # exactly the poisoned slots (injected or organic NaN alike)
+            raise NonFiniteLogitsError(
+                f"non-finite logits at engine step {self._step_no} for "
+                f"slot(s) {bad}", slots=tuple(bad))
 
     # ------------------------------------------------------------ retire
     def _hit_eos(self, req: Request, toks: np.ndarray) -> bool:
@@ -908,7 +1203,8 @@ class ServeEngine:
                        cached=slot.cached)
 
     def _complete(self, req: Request, gen, t_admit: float, t_first: float,
-                  events: List[Tuple[float, int]], cached: int = 0):
+                  events: List[Tuple[float, int]], cached: int = 0,
+                  fault_reason: Optional[str] = None):
         gen = np.asarray(gen, np.int32)
         if gen.size == 0:
             shape = (req.prompt.shape[0], 0) if req.prompt.ndim == 2 else (0,)
@@ -921,7 +1217,8 @@ class ServeEngine:
             )
         timing = request_timing(req.t_submit, t_admit, t_first, events, self.clock())
         self._outbox.append(RequestOutput(
-            req.id, req.prompt, gen, timing.wall_time_s, hw, timing
+            req.id, req.prompt, gen, timing.wall_time_s, hw, timing,
+            fault_reason=fault_reason,
         ))
 
     # ------------------------------------------------------------- stats
@@ -961,6 +1258,10 @@ class ServeEngine:
         }
         if self._prefix is None and self._prefix_off_reason:
             out["prefix_cache_off_reason"] = self._prefix_off_reason
+        if self._ladder is not None:
+            out["degraded_level"] = self._ladder.level_name
+            out["degraded_transitions"] = len(self._ladder.transitions)
+            out["prefix_admission"] = self._prefix_admission
         return out
 
     @property
@@ -970,6 +1271,25 @@ class ServeEngine:
         if self._sched is None:
             return {"active": False}
         return {"active": True, **self._sched.stats}
+
+    def stats(self) -> Dict[str, object]:
+        """One-call serving snapshot: fault/degraded counters plus the
+        per-subsystem stat dicts (docs/SERVING.md §Fault tolerance)."""
+        return {
+            "step": self._step_no,
+            "queued": len(self._queue),
+            "slots_live": sum(s is not None for s in self._slots),
+            "n_quarantined": self._n_quarantined,
+            "n_cancelled": self._n_cancelled,
+            "n_shed": self._n_shed,
+            "degraded_level": (self._ladder.level_name
+                               if self._ladder is not None else "normal"),
+            "degraded_transitions": (list(self._ladder.transitions)
+                                     if self._ladder is not None else []),
+            "kv": self.kv_stats,
+            "prefix": self.prefix_stats,
+            "scheduler": self.scheduler_stats,
+        }
 
     # -------------------------------------------------------- convenience
     def generate_batch(self, prompts: Sequence[np.ndarray], max_new_tokens: int,

@@ -1,0 +1,163 @@
+"""Deterministic fault injection for the serving stack.
+
+ASTRA's stochastic photonic datapath is noisy by construction, and a
+production serving tier cannot assume a decode step always succeeds: the
+device can throw (the XLA analogue of a link/laser fault), analog noise
+can push logits non-finite, the KV pool can be squeezed by a co-tenant,
+and a step can simply run slow.  This module gives those failure modes
+*names* and a seeded, replayable schedule so the whole fault story —
+quarantine, retry, degraded mode (docs/SERVING.md §Fault tolerance) —
+is testable on the virtual clock with zero ambient randomness.
+
+Fault classes (``FaultSpec.kind``):
+
+* ``step_error``       — the fused decode dispatch raises before any
+  state is committed (stands in for an XLA/device error).  Retryable.
+* ``nonfinite_logits`` — NaN is injected into one slot's logits inside
+  the fused scan; the per-chunk finite guard attributes it to the right
+  slot.  Retryable (models transient analog noise).
+* ``pool_pressure``    — the supervisor allocates and holds free KV
+  blocks for ``duration`` engine steps, forcing admission shortfalls
+  and exercising the degraded-mode ladder.  Retryable (shed requests
+  can be resubmitted once pressure clears).
+* ``slow_step``        — the (virtual) clock advances by ``delay_s``
+  before the step runs; latency metrics feel it, tokens do not.
+
+The injector itself never touches the engine: :class:`EngineSupervisor`
+(serve/supervisor.py) pops the specs due at each step and routes them —
+decode faults into ``ServeEngine.step(faults=...)``, pressure/slow-step
+faults around it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+FAULT_STEP_ERROR = "step_error"
+FAULT_NONFINITE = "nonfinite_logits"
+FAULT_POOL_PRESSURE = "pool_pressure"
+FAULT_SLOW_STEP = "slow_step"
+FAULT_KINDS: Tuple[str, ...] = (
+    FAULT_STEP_ERROR, FAULT_NONFINITE, FAULT_POOL_PRESSURE, FAULT_SLOW_STEP,
+)
+
+# terminal reasons originating from the *client* side rather than a fault
+CANCELLED = "cancelled"
+DEADLINE_EXCEEDED = "deadline_exceeded"
+
+# fault classes worth re-submitting: transient by construction.  The
+# cancel class is deliberate client intent — never retried.
+RETRYABLE_FAULTS = frozenset({FAULT_STEP_ERROR, FAULT_NONFINITE,
+                              FAULT_POOL_PRESSURE})
+CANCEL_CLASS = frozenset({CANCELLED, DEADLINE_EXCEEDED})
+
+
+class ServeFault(RuntimeError):
+    """A per-step serving fault attributable to specific slots.
+
+    ``slots`` names the engine slot indices implicated; every other slot
+    committed (or never started) this step and stays bit-identical to a
+    fault-free replay.  Without a supervisor these propagate loudly —
+    silent degradation is exactly what the swallowed-exceptions checker
+    bans.
+    """
+
+    reason = "fault"
+
+    def __init__(self, message: str, slots: Sequence[int] = ()):
+        super().__init__(message)
+        self.slots: Tuple[int, ...] = tuple(slots)
+
+
+class InjectedStepError(ServeFault):
+    """Injected whole-step failure: raised before any state commit."""
+
+    reason = FAULT_STEP_ERROR
+
+
+class NonFiniteLogitsError(ServeFault):
+    """Non-finite logits detected (injected or organic) on named slots."""
+
+    reason = FAULT_NONFINITE
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.
+
+    ``step`` is the supervisor step index it fires at.  ``slot`` is a
+    victim *hint* — the engine resolves it against the slots actually
+    active that step (``hint % n_active``) so seeded schedules stay
+    meaningful whatever the admission pattern; ``None`` picks the first
+    active slot.  ``duration``/``blocks`` shape pool-pressure holds and
+    ``delay_s`` shapes slow steps; the other kinds ignore them.
+    """
+
+    step: int
+    kind: str
+    slot: Optional[int] = None
+    duration: int = 1       # pool_pressure: steps the blocks stay held
+    blocks: int = 0         # pool_pressure: blocks to grab (0 = all free)
+    delay_s: float = 0.0    # slow_step: seconds the clock jumps forward
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.step < 0 or self.duration < 1 or self.delay_s < 0:
+            raise ValueError(f"invalid FaultSpec timing: {self}")
+
+
+class ServeFaultInjector:
+    """A replayable schedule of :class:`FaultSpec`, popped step by step.
+
+    Construct with an explicit schedule, or use :meth:`periodic` for a
+    seeded pseudo-random one.  ``fired`` keeps everything already
+    delivered, so a test (or ``launch/serve.py``'s summary) can report
+    exactly which faults a run saw.
+    """
+
+    def __init__(self, schedule: Sequence[FaultSpec] = ()):
+        self.schedule: Tuple[FaultSpec, ...] = tuple(
+            sorted(schedule, key=lambda s: s.step))
+        self._by_step: Dict[int, List[FaultSpec]] = {}
+        for spec in self.schedule:
+            self._by_step.setdefault(spec.step, []).append(spec)
+        self.fired: List[FaultSpec] = []
+
+    def pop(self, step: int) -> List[FaultSpec]:
+        """Specs due at ``step`` (each delivered exactly once)."""
+        specs = self._by_step.pop(step, [])
+        self.fired.extend(specs)
+        return specs
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(v) for v in self._by_step.values())
+
+    @classmethod
+    def periodic(cls, n_steps: int, every: int,
+                 kinds: Sequence[str] = (FAULT_STEP_ERROR, FAULT_NONFINITE),
+                 seed: int = 0, duration: int = 2,
+                 delay_s: float = 0.25) -> "ServeFaultInjector":
+        """One fault every ``every`` steps over ``n_steps``, kind and
+        victim slot drawn from an inline LCG — ``serve/`` is inside the
+        trace-purity scope, so no ambient RNG (``numpy.random``/``random``)
+        is available here, and the schedule is a pure function of
+        ``(n_steps, every, kinds, seed)``.
+        """
+        if every < 1:
+            raise ValueError("every must be >= 1")
+        state = (seed ^ 0x9E3779B9) & 0xFFFFFFFF
+
+        def nxt() -> int:
+            nonlocal state
+            state = (1664525 * state + 1013904223) & 0xFFFFFFFF
+            return state >> 8
+
+        specs = []
+        for step in range(every - 1, n_steps, every):
+            kind = kinds[nxt() % len(kinds)]
+            specs.append(FaultSpec(step=step, kind=kind, slot=nxt() % 64,
+                                   duration=duration, delay_s=delay_s))
+        return cls(specs)

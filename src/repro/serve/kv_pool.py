@@ -105,3 +105,26 @@ class KVBlockPool:
         self._ref[block] -= 1
         if self._ref[block] == 0:
             self._free.append(block)
+
+    # --------------------------------------------------------------- audit
+    def check_consistent(self) -> None:
+        """Free-list/refcount cross-check (``ServeEngine.audit()`` leg).
+
+        The free list must be duplicate-free, scratch-free, and must
+        contain *exactly* the zero-refcount non-scratch blocks — a block
+        in both worlds (free yet referenced) or in neither (leaked) is a
+        bug in release/quarantine bookkeeping.  Raises ``RuntimeError``.
+        """
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise RuntimeError("KV pool corrupt: duplicate blocks in free list")
+        if 0 in free:
+            raise RuntimeError("KV pool corrupt: scratch block 0 on free list")
+        zero_ref = {b for b in range(1, self.n_blocks) if self._ref[b] == 0}
+        if free != zero_ref:
+            leaked = sorted(zero_ref - free)
+            phantom = sorted(free - zero_ref)
+            raise RuntimeError(
+                "KV pool corrupt: free list != zero-ref blocks "
+                f"(leaked={leaked[:8]}, free-but-referenced={phantom[:8]})"
+            )

@@ -156,5 +156,21 @@ class RadixPrefixTree:
                 tiebreak += 1
         return freed
 
+    def interned_blocks(self) -> List[int]:
+        """Every block id the tree currently holds a reference on.
+
+        One entry per node (the tree holds exactly one ref per interned
+        block) — this is the tree's leg of ``ServeEngine.audit()``'s
+        refcount cross-check.
+        """
+        out: List[int] = []
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root:
+                out.append(n.block)
+        return out
+
     def __len__(self) -> int:
         return self.n_nodes

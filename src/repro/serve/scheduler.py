@@ -137,3 +137,58 @@ class TokenBudgetScheduler:
             "prefill_tokens": self.prefill_tokens,
             "starved_rounds": self.starved_rounds,
         }
+
+
+class DegradedLadder:
+    """Pool-pressure response ladder (docs/SERVING.md §Fault tolerance).
+
+    The paged engine's construction-time block floor makes *organic*
+    admission infallible, so a stalled admission round means external
+    pressure: held blocks (a co-tenant, an injected ``pool_pressure``
+    fault) or a broken pool.  Instead of wedging, the engine walks this
+    ladder one level per stalled round, trading cache value for
+    admission headroom:
+
+      ``normal`` -> ``flush_prefix``        (evict every evictable
+                                             interned prefix block)
+           -> ``no_prefix_admission``       (stop matching/interning
+                                             prefixes entirely, flush
+                                             again each stalled round)
+           -> ``shed_load``                 (fail the queue head as a
+                                             terminal ``pool_pressure``
+                                             fault output — bounded: one
+                                             request per stalled round)
+
+    Each round with admission progress relaxes one level; back at
+    ``normal`` the engine re-enables prefix admission.  Every transition
+    is recorded as ``(engine_step, new_level)`` and surfaced through
+    ``ServeEngine.stats()`` / ``kv_stats``, so degraded operation is
+    observable, never silent.  Pure host-side policy, like the
+    scheduler: the engine owns all the acting.
+    """
+
+    NORMAL, FLUSH_PREFIX, NO_PREFIX_ADMISSION, SHED_LOAD = range(4)
+    LEVEL_NAMES = ("normal", "flush_prefix", "no_prefix_admission",
+                   "shed_load")
+
+    def __init__(self):
+        self.level = self.NORMAL
+        self.transitions: List[Tuple[int, str]] = []
+
+    @property
+    def level_name(self) -> str:
+        return self.LEVEL_NAMES[self.level]
+
+    def escalate(self, step: int) -> int:
+        """One stalled admission round: move one level up (saturating)."""
+        if self.level < self.SHED_LOAD:
+            self.level += 1
+            self.transitions.append((step, self.level_name))
+        return self.level
+
+    def relax(self, step: int) -> int:
+        """One round with admission progress: move one level down."""
+        if self.level > self.NORMAL:
+            self.level -= 1
+            self.transitions.append((step, self.level_name))
+        return self.level

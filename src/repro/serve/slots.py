@@ -54,6 +54,17 @@ def select_states(new: Dict[str, Any], old: Dict[str, Any], active: jax.Array):
     return out
 
 
+def finite_mask(logits: jax.Array) -> jax.Array:
+    """Per-slot finiteness of a decode-step logits tensor.
+
+    Reduces every non-slot axis (``[B, 1, V]`` or ``[B, C, 1, V]`` →
+    ``[B]`` bool): ``True`` iff all of the slot's logits are finite.  The
+    fused decode loop ANDs this across a chunk's steps so NaN poisoning
+    is attributed to the exact slot that produced it (serve/faults.py).
+    """
+    return jnp.all(jnp.isfinite(logits), axis=tuple(range(1, logits.ndim)))
+
+
 def _block_scatter(pool: jax.Array, dense: jax.Array, rows: jax.Array, axis: int):
     """Scatter a dense per-request cache into pool blocks.
 

@@ -108,6 +108,18 @@ def replay_trace(frontend: ServeFrontend, trace: TrafficTrace,
             chunks.setdefault(rid_box[0], []).append(np.asarray(toks))
         return _sink
 
+    # when the front-end retries a faulted attempt, its partial stream is
+    # withdrawn — drop our copy too so `token_streams` stays equal to the
+    # terminal output for retried-then-completed requests
+    prev_on_retry = frontend.on_retry
+
+    def _on_retry(rid: int) -> None:
+        chunks.pop(rid, None)
+        if prev_on_retry is not None:
+            prev_on_retry(rid)
+
+    frontend.on_retry = _on_retry
+
     t0 = clock()
     reqs = trace.requests
     rids: List[int] = []

@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.serve.engine import RequestOutput
+from repro.serve.faults import CANCEL_CLASS
 
 PERCENTILES = (50, 95, 99)
 
@@ -44,7 +45,8 @@ class SLOConfig:
             raise ValueError(f"itl_s={self.itl_s} must be > 0")
 
     def met_by(self, out: RequestOutput) -> bool:
-        if out.reject_reason is not None or out.timing is None:
+        if out.reject_reason is not None or out.fault_reason is not None \
+                or out.timing is None:
             return False
         return (out.timing.ttft_s <= self.ttft_s
                 and out.timing.max_itl_s <= self.itl_s)
@@ -66,11 +68,23 @@ def evaluate(outputs: Sequence[RequestOutput], duration_s: float,
     rejections; ``duration_s`` is the replay span (virtual or wall) used
     as the rate denominator.  Returns a flat JSON-ready dict.
     """
-    done: List[RequestOutput] = [o for o in outputs if o.reject_reason is None]
+    done: List[RequestOutput] = [
+        o for o in outputs
+        if o.reject_reason is None and o.fault_reason is None
+    ]
     rejected = [o for o in outputs if o.reject_reason is not None]
+    # terminal faults (quarantined / shed / deadline / cancelled) are not
+    # completions and not rejections: the engine accepted them but could
+    # not (or was told not to) finish them — scored separately
+    faulted = [o for o in outputs if o.fault_reason is not None]
     by_reason: Dict[str, int] = {}
     for o in rejected:
         by_reason[o.reject_reason] = by_reason.get(o.reject_reason, 0) + 1
+    faults_by_reason: Dict[str, int] = {}
+    for o in faulted:
+        faults_by_reason[o.fault_reason] = faults_by_reason.get(o.fault_reason, 0) + 1
+    n_cancelled = sum(1 for o in faulted
+                      if o.fault_reason in CANCEL_CLASS)
     ttfts = [o.timing.ttft_s for o in done if o.timing is not None]
     itls = [o.timing.mean_itl_s for o in done if o.timing is not None]
     queue = [o.timing.queue_time_s for o in outputs if o.timing is not None]
@@ -82,6 +96,9 @@ def evaluate(outputs: Sequence[RequestOutput], duration_s: float,
         "n_completed": len(done),
         "n_rejected": len(rejected),
         "rejected_by_reason": by_reason,
+        "n_faulted": len(faulted) - n_cancelled,
+        "n_cancelled": n_cancelled,
+        "faulted_by_reason": faults_by_reason,
         "rejection_rate": len(rejected) / max(n, 1),
         "duration_s": duration_s,
         "offered_rps": (offered_rps if offered_rps is not None else n / dur),

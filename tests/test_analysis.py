@@ -38,6 +38,7 @@ def test_registry_has_the_contracted_checkers():
     assert set(CHECKERS) >= {
         "trace-purity", "pallas-hazards", "kernel-contract",
         "site-grammar", "config-surface", "determinism-gates",
+        "swallowed-exceptions",
     }
     for c in CHECKERS.values():
         assert c.doc, f"checker {c.name} needs a one-line docstring"
@@ -76,6 +77,68 @@ def test_trace_purity_resolves_import_aliases(tmp_path):
     msgs = [f.message for f in lint(tmp_path, "trace-purity")]
     assert any("numpy.random" in m for m in msgs)
     assert any("from time import monotonic" in m for m in msgs)
+
+
+# ---------------------------------------------------- swallowed-exceptions
+def test_swallowed_exceptions_planted(tmp_path):
+    make_repo(tmp_path, {
+        "src/repro/serve/sup.py": """
+            def drive(engine):
+                try:
+                    engine.step()
+                except:
+                    pass
+
+            def poll(engines):
+                for e in engines:
+                    try:
+                        e.step()
+                    except (ValueError, Exception):
+                        continue
+        """,
+        "src/repro/runtime/loop.py": """
+            def run(step):
+                try:
+                    step()
+                except BaseException:
+                    ...
+        """,
+    })
+    found = lint(tmp_path, "swallowed-exceptions")
+    assert {(f.path, f.line) for f in found} == {
+        ("src/repro/serve/sup.py", 5), ("src/repro/serve/sup.py", 12),
+        ("src/repro/runtime/loop.py", 5),
+    }
+    assert any("bare 'except:'" in f.message for f in found)
+
+
+def test_swallowed_exceptions_clean_and_scoped(tmp_path):
+    make_repo(tmp_path, {
+        # acting handlers and narrow swallows are the sanctioned patterns
+        "src/repro/serve/ok.py": """
+            import logging
+
+            def drive(engine, log=logging.getLogger("x")):
+                try:
+                    engine.step()
+                except Exception as e:
+                    log.warning("step failed: %s", e)
+                    raise
+                try:
+                    engine.poll()
+                except KeyError:
+                    pass
+        """,
+        # outside serve/runtime the checker does not apply at all
+        "src/repro/traffic/other.py": """
+            def f():
+                try:
+                    g()
+                except:
+                    pass
+        """,
+    })
+    assert lint(tmp_path, "swallowed-exceptions") == []
 
 
 def test_trace_purity_clean_on_injected_clock_and_keys(tmp_path):

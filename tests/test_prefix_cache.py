@@ -93,8 +93,8 @@ def test_fused_matches_unfused_with_tables(stablelm):
     tok = jax.random.randint(key, (b, 1), 0, model.cfg.vocab, jnp.int32)
     pos = jnp.full((b,), 5, jnp.int32)
     fused = make_fused_decode(model)
-    tf, _ = fused(params, tok, states, pos, key, steps=6, sampler=GREEDY, tables=tables)
-    tu, _ = unfused_decode(model, params, tok, states, pos, key, 6, GREEDY, tables=tables)
+    tf, _, _ = fused(params, tok, states, pos, key, steps=6, sampler=GREEDY, tables=tables)
+    tu, _, _ = unfused_decode(model, params, tok, states, pos, key, 6, GREEDY, tables=tables)
     np.testing.assert_array_equal(np.asarray(tf), np.asarray(tu))
 
 

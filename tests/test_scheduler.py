@@ -256,7 +256,7 @@ def test_random_budgets_token_identical(budget, lens, paged):
 
 
 # ------------------------------------------------- admission exception safety
-def _forced_shortfall_engine(key, chunked=False):
+def _forced_shortfall_engine(key, chunked=False, **cfg_over):
     """Engine at the pool floor with an interned tree and a broken evict:
     the next admission's alloc must fail — and must fail *cleanly*."""
     model = _model("stablelm-1.6b")
@@ -265,7 +265,7 @@ def _forced_shortfall_engine(key, chunked=False):
     eng = ServeEngine(model, params, ServeConfig(
         max_slots=2, max_len=16, chunk_steps=2, kv_block_size=4,
         kv_pool_blocks=9, astra_accounting=False,
-        prefill_chunk_tokens=4 if chunked else 0))
+        prefill_chunk_tokens=4 if chunked else 0, **cfg_over))
     for s in range(3):  # each interns 2 blocks -> 6 tree-held of 8 usable
         eng.generate_batch(_prompts(model.cfg, (8,), seed=10 + s), 4)
     assert eng.prefix_stats["interned_blocks"] == 6
@@ -300,12 +300,33 @@ def test_forced_evict_shortfall_rolls_back_and_recovers(chunked, key):
 
 def test_wedged_admission_raises_instead_of_spinning(key):
     """All slots free + admission failing forever can release nothing:
-    the engine must raise, not spin."""
-    model, params, eng = _forced_shortfall_engine(key)
+    with the degraded-mode ladder disabled the engine must raise, not
+    spin (the ladder's shed level is the graceful alternative, below)."""
+    model, params, eng = _forced_shortfall_engine(key, degraded_mode=False)
     eng._prefix.evict = lambda n, pool: 0
     eng.submit(_prompts(model.cfg, (8,), seed=22)[0], 4)
     with pytest.raises(RuntimeError, match="wedged"):
         eng.run()
+
+
+def test_degraded_ladder_sheds_instead_of_wedging(key):
+    """Same forced-shortfall scenario with the ladder on: the engine
+    walks flush_prefix -> no_prefix_admission -> shed_load and fails the
+    queued request as a terminal pool_pressure fault instead of raising
+    (docs/SERVING.md §Fault tolerance)."""
+    model, params, eng = _forced_shortfall_engine(key)
+    eng._prefix.evict = lambda n, pool: 0
+    rid = eng.submit(_prompts(model.cfg, (8,), seed=22)[0], 4)
+    outs = eng.run()  # terminates: the shed level bounds the stall
+    [out] = [o for o in outs if o.request_id == rid]
+    assert out.fault_reason == "pool_pressure"
+    assert out.gen_len == 0
+    st = eng.stats()
+    assert st["n_shed"] == 1
+    assert [name for _, name in st["degraded_transitions"]] == [
+        "flush_prefix", "no_prefix_admission", "shed_load"]
+    assert eng.kv_stats["degraded_level"] == "shed_load"
+    assert eng.kv_stats["prefix_admission"] is False
 
 
 # ------------------------------------------------- intake/outtake bugfixes

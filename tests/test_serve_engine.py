@@ -260,8 +260,8 @@ def test_fused_scan_matches_dispatch_loop(mode, sampler, key):
     pos = jnp.full((b,), s0, jnp.int32)
     states = model.init_decode_state(b, 24)
     fused = make_fused_decode(model)
-    toks_f, _ = fused(params, tok, states, pos, key, steps=steps, sampler=sampler)
-    toks_u, _ = unfused_decode(model, params, tok, states, pos, key, steps, sampler)
+    toks_f, _, _ = fused(params, tok, states, pos, key, steps=steps, sampler=sampler)
+    toks_u, _, _ = unfused_decode(model, params, tok, states, pos, key, steps, sampler)
     np.testing.assert_array_equal(np.asarray(toks_f), np.asarray(toks_u))
 
 
